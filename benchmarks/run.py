@@ -1,0 +1,67 @@
+"""Benchmark harness: one function per paper table (benchmarks.paper_tables)
+plus kernel micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def bench_kernels():
+    """Pallas kernels (interpret mode on CPU): per-call wall time vs ref."""
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 512))
+    for name, fn in [
+        ("kernel_lut_gelu", lambda: ops.lut_gelu(x)),
+        ("ref_lut_gelu", lambda: ref.lut_gelu(x)),
+        ("kernel_lut_softmax", lambda: ops.lut_softmax(x)),
+        ("ref_lut_softmax", lambda: ref.lut_softmax(x)),
+    ]:
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn()
+        jax.block_until_ready(out)
+        print(f"{name},{(time.perf_counter()-t0)/5*1e6:.1f},interpret_mode")
+    q = jax.random.normal(key, (1, 4, 128, 64))
+    k = jax.random.normal(key, (1, 2, 128, 64))
+    t0 = time.perf_counter()
+    out = ops.lut_attention(q, k, k)
+    jax.block_until_ready(out)
+    print(f"kernel_lut_attention,{(time.perf_counter()-t0)*1e6:.1f},"
+          "interpret_mode_single_call")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the trained-model tables (fast CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+
+    print("name,us_per_call,derived")
+    bench_kernels()
+    pt.bench_custom_ops()       # Table VII
+    pt.bench_lut_cost()         # Table VIII analogue
+    pt.bench_op_profile()       # Figs 3-5
+    pt.bench_gelu_approx()      # Fig 7
+    if not args.quick:
+        fam = pt.bench_model_family()    # Tables I/III/IV (trains KWT-Tiny)
+        trained = fam.get("trained")
+        pt.bench_scale_sweep(trained)    # Table V
+        pt.bench_inference_profile(trained)  # Table IX
+    print("benchmarks complete.", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

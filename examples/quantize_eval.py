@@ -1,0 +1,80 @@
+"""Table V reproduction CLI: sweep power-of-2 scale factors for any arch.
+
+For KWT-Tiny this reproduces the paper's sweep; for the assigned LM archs
+(reduced configs on CPU) it demonstrates the technique is arch-generic:
+
+  PYTHONPATH=src python examples/quantize_eval.py --arch kwt-tiny
+  PYTHONPATH=src python examples/quantize_eval.py --arch internlm2-1.8b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import calibrate, quant
+from repro.data import pipeline
+from repro.models import kwt
+from repro.models import transformer as T
+from repro.optim import adamw
+
+PAIRS = [(3, 3), (4, 4), (5, 5), (6, 5), (6, 6)]   # Table V rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kwt-tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    entry = registry.get(args.arch)
+
+    if args.arch.startswith("kwt"):
+        cfg = entry.config
+        hp = adamw.HParams(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                           weight_decay=0.0)
+        params = kwt.init_params(cfg, jax.random.PRNGKey(0))
+        state = adamw.init(params, hp)
+
+        @jax.jit
+        def step(params, state, batch):
+            loss, grads = jax.value_and_grad(kwt.loss_fn)(params, batch, cfg)
+            params, state, _ = adamw.update(grads, state, params, hp,
+                                            scan_stacked=False)
+            return params, state, loss
+
+        for i in range(args.steps):
+            params, state, _ = step(params, state, pipeline.keyword_batch(
+                0, i, batch=64, input_dim=cfg.input_dim,
+                n_classes=cfg.n_classes))
+        batches = [(b["mfcc"], b["labels"]) for b in pipeline.gsc_eval_set(
+            0, n=512, input_dim=cfg.input_dim, n_classes=cfg.n_classes)]
+        res = calibrate.sweep_scale_factors(
+            lambda p, x: kwt.forward(p, x, cfg), params, batches, pairs=PAIRS)
+        print("weights, inputs, accuracy, int8 bytes   (paper Table V)")
+        for r in res:
+            print(f"2^{r.weight_exponent} ({2**r.weight_exponent:3d}), "
+                  f"2^{r.input_exponent} ({2**r.input_exponent:3d}), "
+                  f"{r.accuracy:.3f}, {r.quantized_bytes}")
+        return
+
+    # LM arch: perplexity degradation per weight exponent (reduced config)
+    cfg = entry.smoke
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = pipeline.lm_batch(0, 0, global_batch=4, seq_len=32,
+                              vocab_size=cfg.vocab_size)
+    ref_loss = float(T.loss_fn(params, batch, cfg))
+    print(f"{args.arch}: float loss {ref_loss:.4f}")
+    for wexp in (3, 4, 5, 6, 7):
+        qp = quant.dequantize_tree(quant.quantize_tree(params, weight_exponent=wexp))
+        l = float(T.loss_fn(qp, batch, cfg.with_(softmax_mode='lut',
+                                                 act_approx='lut')))
+        print(f"  w=2^{wexp}: quantised+LUT loss {l:.4f} "
+              f"(delta {l-ref_loss:+.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving of a small LM with continuous batching and the paper's
+quantised+LUT path — compares float vs quantised throughput and outputs.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch internlm2-1.8b]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    args = ap.parse_args()
+    base = ["--arch", args.arch, "--smoke", "--requests", "8",
+            "--slots", "4", "--max-len", "48"]
+    print("== float path ==")
+    serve.main(base)
+    print("== quantised + LUT path (paper §IV+§VI) ==")
+    serve.main(base + ["--quantize"])
+
+
+if __name__ == "__main__":
+    main()

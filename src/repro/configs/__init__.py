@@ -1,0 +1,2 @@
+from repro.configs import base, registry  # noqa: F401
+from repro.configs.base import ArchEntry, ModelConfig, QuantConfig, ShapeSpec  # noqa: F401

@@ -1,0 +1,32 @@
+"""--arch name resolution for launchers, tests, and benchmarks."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "chameleon-34b": "chameleon_34b",
+    "whisper-large-v3": "whisper_large_v3",
+    "hymba-1.5b": "hymba_1_5b",
+    "rwkv6-3b": "rwkv6_3b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "granite-8b": "granite_8b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "kwt-1": "kwt_1",
+    "kwt-tiny": "kwt_tiny",
+}
+
+ASSIGNED = [k for k in ARCHS if not k.startswith("kwt")]
+
+
+def get(name: str):
+    """Return the ArchEntry for an --arch id."""
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.ENTRY
+
+
+def all_entries():
+    return {name: get(name) for name in ARCHS}

@@ -1,0 +1,10 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+fixedpoint  - Q8.24 arithmetic (ALU_TO_FIXED / ALU_TO_FLOAT)
+lut         - the 2.69 kB ROM tables (eqs 11-13)
+approx      - LUT softmax / GELU / SiLU dispatchers (Table VII behaviours)
+quant       - power-of-2 PTQ (eq 9), QTensor, integer matmul
+calibrate   - Table V scale-factor sweep
+"""
+
+from repro.core import approx, calibrate, fixedpoint, lut, quant  # noqa: F401

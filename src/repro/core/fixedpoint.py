@@ -1,0 +1,76 @@
+"""Q8.24 fixed-point arithmetic (paper §VI, ALU_TO_FIXED / ALU_TO_FLOAT).
+
+The paper's custom RISC-V ALU operates on Q8.24 integers: a signed 32-bit
+integer whose low 24 bits are the fraction.  Representable range is
+[-128, 128) with resolution 2^-24.
+
+On TPU these become element-wise VPU integer ops; everything here is
+jit-able, vectorised jnp, and is also executed verbatim inside Pallas
+kernel bodies (interpret mode on CPU, compiled on TPU).
+
+int64 is unavailable without x64 mode, so the Q8.24 × Q8.24 product uses a
+12/12-bit limb decomposition (`fixed_mul`) that is exact whenever both
+magnitudes fit in 24 bits (i.e. values in [0, 1) after normalisation) —
+precisely the domain the paper's SoftMax pipeline produces (e^{-z} ∈ [0,1],
+1/sum ∈ (0,1]).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FRAC_BITS = 24
+ONE = 1 << FRAC_BITS  # 1.0 in Q8.24
+_INT32_MAX = jnp.int32(2**31 - 1)
+_INT32_MIN = jnp.int32(-(2**31))
+
+
+def to_fixed(x: jnp.ndarray) -> jnp.ndarray:
+    """ALU_TO_FIXED: float -> Q8.24 int32 (round-to-nearest, saturating)."""
+    scaled = jnp.asarray(x, jnp.float32) * float(ONE)
+    scaled = jnp.clip(scaled, float(_INT32_MIN), float(_INT32_MAX))
+    return jnp.round(scaled).astype(jnp.int32)
+
+
+def to_float(q: jnp.ndarray) -> jnp.ndarray:
+    """ALU_TO_FLOAT: Q8.24 int32 -> float32."""
+    return q.astype(jnp.float32) * (1.0 / float(ONE))
+
+
+def fixed_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Q8.24 multiply, exact for |a|,|b| <= 1.0 (24-bit magnitudes).
+
+    (a * b) >> 24 via 12/12 limb split so every partial product fits int32:
+      a = ah*2^12 + al,  b = bh*2^12 + bl   (ah,bh <= 2^12 when |x|<=1)
+      (a*b)>>24 = ah*bh + ((ah*bl + al*bh) >> 12) + ((al*bl) >> 24)
+    """
+    sign = jnp.sign(a.astype(jnp.int32)) * jnp.sign(b.astype(jnp.int32))
+    ma = jnp.abs(a).astype(jnp.int32)
+    mb = jnp.abs(b).astype(jnp.int32)
+    ah, al = ma >> 12, ma & 0xFFF
+    bh, bl = mb >> 12, mb & 0xFFF
+    prod = ah * bh + ((ah * bl + al * bh) >> 12) + ((al * bl) >> 24)
+    return (sign * prod).astype(jnp.int32)
+
+
+def fixed_shift_mul(a: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Multiply a Q8.24 value by 2^shift (the paper's power-of-2 rescale)."""
+    if shift >= 0:
+        return (a.astype(jnp.int32) << shift).astype(jnp.int32)
+    return (a.astype(jnp.int32) >> (-shift)).astype(jnp.int32)
+
+
+def ilog2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for positive int32 x, as a fixed compare ladder
+    (no loops / no clz instruction -> TPU VPU friendly).
+
+    Used by the range-reduced reciprocal (lut.reciprocal_q24): a Q8.24
+    value x is normalised to m = x * 2^-t in [1, 2) with t = ilog2(x) - 24.
+    """
+    x = x.astype(jnp.int32)
+    k = jnp.zeros_like(x)
+    for step in (16, 8, 4, 2, 1):
+        cond = x >= (jnp.int32(1) << step)
+        k = jnp.where(cond, k + step, k)
+        x = jnp.where(cond, x >> step, x)
+    return k

@@ -1,0 +1,144 @@
+"""Lookup-table construction (paper §VI, eqs 11-13, Table VII).
+
+Three ROM tables, identical contents/sizes to the paper's:
+
+  LUT_EXP  (ALU_EXP):    320 entries, e^{-z} for z in [0, 10), 32 bins/unit
+                         -> LUT1[z*32] ~= 1/e^z              (eq 11)
+  LUT_INV  (ALU_INVERT): 320 entries, 1/z for z in (0, 10], 32 bins/unit
+                         -> LUT2[z*32 - 1] ~= 1/z            (eq 12)
+  LUT_GELU (ALU_GELU):   32 entries over [-1.857, 1.595]     (eq 13, Fig 7)
+                         identity tail above 1.595, zero tail below -1.857
+
+Total ROM = (320+320)*4B + 32*4B = 2.69 kB, matching the paper's figure.
+
+Tables are materialised both as float32 (the framework's float path) and as
+Q8.24 int32 (the fixed-point path executed inside the Pallas kernels).
+Construction is pure numpy at trace time; the tables enter jit as constants
+and live in VMEM inside kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+
+EXP_RANGE = 10.0          # paper: "all values of e^{max(x)-x_i} lie between 0 and 10"
+BINS_PER_UNIT = 32        # paper: "32 divisions per unit"
+N_EXP_ENTRIES = int(EXP_RANGE * BINS_PER_UNIT)   # 320
+N_GELU_ENTRIES = 32
+GELU_HI = 1.595           # GELU(x) = x above this           (paper Fig 7)
+GELU_LO = -1.857          # GELU(x) = 0 below this
+
+
+@dataclasses.dataclass(frozen=True)
+class LutBank:
+    """The paper's 2.69 kB ROM bank.
+
+    Held as *numpy* arrays (safe to lru_cache across jit traces; they enter
+    each trace as fresh constants via jnp.take / jnp.asarray at use sites).
+    """
+
+    exp_f32: np.ndarray    # [320] e^{-i/32}
+    inv_f32: np.ndarray    # [320] 32/(i+1)  == 1/z at z=(i+1)/32
+    gelu_f32: np.ndarray   # [32]  GELU on linspace(GELU_LO, GELU_HI, 32)
+    exp_q24: np.ndarray    # int32 Q8.24 versions of the same
+    inv_q24: np.ndarray
+    gelu_q24: np.ndarray
+
+    @property
+    def rom_bytes(self) -> int:
+        return 4 * (self.exp_f32.size + self.inv_f32.size + self.gelu_f32.size)
+
+
+def _gelu_exact_np(x: np.ndarray) -> np.ndarray:
+    # erf via numpy to avoid a scipy dependency: use the identity with
+    # math.erf vectorised (exact, not tanh-approximated -- paper eq 7).
+    import math
+
+    return np.asarray(
+        [xi * 0.5 * (1.0 + math.erf(xi / math.sqrt(2.0))) for xi in np.ravel(x)],
+        dtype=np.float64,
+    ).reshape(np.shape(x))
+
+
+@lru_cache(maxsize=4)
+def make_lut_bank(bins_per_unit: int = BINS_PER_UNIT,
+                  exp_range: float = EXP_RANGE,
+                  n_gelu: int = N_GELU_ENTRIES) -> LutBank:
+    n_exp = int(exp_range * bins_per_unit)
+    # eq 11: LUT1[z*32] ~= e^{-z};  entry i corresponds to z = i/32.
+    z = np.arange(n_exp, dtype=np.float64) / bins_per_unit
+    exp_tab = np.exp(-z)
+    # eq 12: LUT2[z*32 - 1] ~= 1/z; entry i corresponds to z = (i+1)/32.
+    zi = (np.arange(n_exp, dtype=np.float64) + 1.0) / bins_per_unit
+    inv_tab = 1.0 / zi
+    # eq 13: 32 GELU samples across the paper's near-optimal thresholds.
+    xg = np.linspace(GELU_LO, GELU_HI, n_gelu)
+    gelu_tab = _gelu_exact_np(xg)
+
+    def q24(a):
+        return np.round(a * (1 << fxp.FRAC_BITS)).astype(np.int32)
+
+    return LutBank(
+        exp_f32=np.asarray(exp_tab, np.float32),
+        inv_f32=np.asarray(inv_tab, np.float32),
+        gelu_f32=np.asarray(gelu_tab, np.float32),
+        exp_q24=q24(exp_tab),
+        inv_q24=q24(inv_tab),
+        gelu_q24=q24(gelu_tab),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Index computations (shared by jnp reference path and Pallas kernels).
+# ---------------------------------------------------------------------------
+
+def exp_index_from_q24(z_q: jnp.ndarray, bins_per_unit: int = BINS_PER_UNIT) -> jnp.ndarray:
+    """Index into LUT_EXP for Q8.24 z >= 0.  i = z*32 == z_q >> (24-5)."""
+    shift = fxp.FRAC_BITS - int(np.log2(bins_per_unit))
+    idx = (z_q >> shift).astype(jnp.int32)
+    return jnp.clip(idx, 0, N_EXP_ENTRIES - 1)
+
+
+def inv_index_from_q24(s_q: jnp.ndarray, bins_per_unit: int = BINS_PER_UNIT) -> jnp.ndarray:
+    """Index into LUT_INV for Q8.24 s > 0.  i = s*32 - 1 (eq 12)."""
+    shift = fxp.FRAC_BITS - int(np.log2(bins_per_unit))
+    idx = (s_q >> shift).astype(jnp.int32) - 1
+    return jnp.clip(idx, 0, N_EXP_ENTRIES - 1)
+
+
+def gelu_index_from_f32(x: jnp.ndarray, n: int = N_GELU_ENTRIES) -> jnp.ndarray:
+    t = (x - GELU_LO) * (float(n - 1) / (GELU_HI - GELU_LO))
+    return jnp.clip(jnp.round(t).astype(jnp.int32), 0, n - 1)
+
+
+def reciprocal_q24(s_q: jnp.ndarray, bank: LutBank, range_reduce: bool = True) -> jnp.ndarray:
+    """1/s for Q8.24 s >= 1, via LUT_INV.
+
+    Paper-faithful mode (range_reduce=False) indexes the (0,10] table
+    directly and clamps -- exact reproduction of eq 12, including its
+    saturation for sums > 10.
+
+    range_reduce=True (beyond-paper robustness, noted in DESIGN.md):
+    normalise s = m * 2^k with m in [1,2), look up 1/m, shift back.
+    Needed for softmax over real sequence lengths (sum of e^{-z} over K
+    keys can reach K >> 10; KWT-Tiny's own SEQLEN=27 already exceeds the
+    table range when attention is flat).
+    """
+    if not range_reduce:
+        return jnp.take(jnp.asarray(bank.inv_q24), inv_index_from_q24(s_q))
+    t = fxp.ilog2(s_q) - fxp.FRAC_BITS          # s * 2^-t in [1, 2)
+    tp = jnp.maximum(t, 0)
+    tn = jnp.maximum(-t, 0)
+    m = ((s_q >> tp) << tn).astype(jnp.int32)   # mantissa in [1, 2) Q8.24
+    inv_m = jnp.take(jnp.asarray(bank.inv_q24), inv_index_from_q24(m))
+    # (1/m) * 2^-t, saturating on the (rare) left-shift overflow path.
+    limit = jnp.int32(2**31 - 1) >> tn
+    return jnp.where(t >= 0, inv_m >> tp,
+                     jnp.where(inv_m > limit, jnp.int32(2**31 - 1),
+                               inv_m << tn)).astype(jnp.int32)

@@ -1,0 +1,137 @@
+"""Power-of-2 post-training static quantisation (paper §IV, eq 9, Table V).
+
+    W_int = floor(W_float * 2^y), stored INT8, dequantised by bit shift.
+
+Design points carried over from the paper:
+  * scale factors are powers of two so (de)quantisation is a shift;
+  * weights and inputs get *separate* exponents (Table V: 2^6 vs 2^5);
+  * intermediate results of int matmuls accumulate wider (paper: INT16
+    residuals; on TPU the MXU gives int32 accumulation for free, and we
+    optionally clip back to int16 to reproduce the paper's storage type);
+  * SoftMax and LayerNorm stay in float in the faithful path (§IV cites
+    [12]: quantising them is "quite taxing on accuracy").
+
+Beyond-paper (flagged, see DESIGN.md §5): per-channel exponents, int8
+quantised Adam moments, int8 error-feedback gradient compression — the same
+eq-9 primitive applied at other points of the stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+INT8_MIN, INT8_MAX = -128, 127
+INT16_MIN, INT16_MAX = -(2**15), 2**15 - 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    """An eq-9 quantised tensor: int values + static power-of-2 exponent."""
+
+    values: jnp.ndarray                                   # int8 / int16
+    exponent: int = dataclasses.field(metadata=dict(static=True))
+    axis_exponents: jnp.ndarray | None = None             # per-channel (beyond-paper)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jnp.ndarray:
+        scale = jnp.float32(2.0 ** (-self.exponent))
+        out = self.values.astype(jnp.float32) * scale
+        if self.axis_exponents is not None:
+            out = out * jnp.exp2(-self.axis_exponents.astype(jnp.float32))
+        return out
+
+
+def quantize_po2(w: jnp.ndarray, exponent: int, *, bits: int = 8,
+                 stochastic_key: jax.Array | None = None) -> QTensor:
+    """eq 9: floor(w * 2^y) with saturation to the int range."""
+    lo, hi = (INT8_MIN, INT8_MAX) if bits == 8 else (INT16_MIN, INT16_MAX)
+    scaled = w.astype(jnp.float32) * (2.0 ** exponent)
+    if stochastic_key is not None:  # beyond-paper: stochastic rounding option
+        noise = jax.random.uniform(stochastic_key, w.shape)
+        q = jnp.floor(scaled + noise)
+    else:
+        q = jnp.floor(scaled)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    return QTensor(values=jnp.clip(q, lo, hi).astype(dtype), exponent=exponent)
+
+
+def choose_exponent(w: jnp.ndarray, *, bits: int = 8) -> int:
+    """Largest y such that floor(max|w| * 2^y) does not saturate.
+
+    The paper picks y by accuracy sweep (Table V); this is the analytic
+    no-overflow bound used as the sweep's starting point.
+    """
+    import numpy as np
+
+    maxabs = float(jnp.max(jnp.abs(w)))
+    if maxabs == 0.0:
+        return bits - 1
+    return int(np.floor(np.log2((2 ** (bits - 1) - 1) / maxabs)))
+
+
+def qmatmul(x: QTensor, w: QTensor, *, out_exponent: int | None = None,
+            residual_bits: int = 16) -> QTensor:
+    """Integer matmul with int32 accumulation and shift rescale.
+
+    C_int32 = X_int8 @ W_int8 has exponent (x.e + w.e).  The result is
+    shifted to ``out_exponent`` and clipped to the residual width (paper:
+    INT16 intermediates).
+    """
+    acc = jax.lax.dot_general(
+        x.values, w.values,
+        dimension_numbers=(((x.values.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc_exp = x.exponent + w.exponent
+    out_exponent = acc_exp if out_exponent is None else out_exponent
+    shift = acc_exp - out_exponent
+    acc = jnp.where(shift >= 0, acc >> shift, acc << (-shift)) if isinstance(shift, jnp.ndarray) \
+        else (acc >> shift if shift >= 0 else acc << (-shift))
+    lo, hi = (INT16_MIN, INT16_MAX) if residual_bits == 16 else (-(2**31), 2**31 - 1)
+    dtype = jnp.int16 if residual_bits == 16 else jnp.int32
+    return QTensor(values=jnp.clip(acc, lo, hi).astype(dtype), exponent=out_exponent)
+
+
+def dequantize_tree(tree: Pytree) -> Pytree:
+    """Replace every QTensor leaf with its float32 dequantisation."""
+    return jax.tree.map(
+        lambda leaf: leaf.dequantize() if isinstance(leaf, QTensor) else leaf,
+        tree, is_leaf=lambda leaf: isinstance(leaf, QTensor))
+
+
+def quantize_tree(params: Pytree, *, weight_exponent: int = 6,
+                  bits: int = 8, skip_norm_scales: bool = True) -> Pytree:
+    """PTQ a parameter pytree with one global weight exponent (Table V row).
+
+    LayerNorm/RMSNorm scale+shift vectors stay float (paper §IV) — detected
+    as rank<=1 leaves when ``skip_norm_scales``.
+    """
+    def one(leaf):
+        if not isinstance(leaf, jnp.ndarray) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        if skip_norm_scales and leaf.ndim <= 1:
+            return leaf
+        return quantize_po2(leaf, weight_exponent, bits=bits)
+
+    return jax.tree.map(one, params)
+
+
+def tree_quantized_bytes(tree: Pytree) -> tuple[int, int]:
+    """(quantised_bytes, float_bytes) of a (partially) quantised tree."""
+    qb = fb = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            qb += leaf.values.size * leaf.values.dtype.itemsize
+        elif isinstance(leaf, jnp.ndarray):
+            fb += leaf.size * leaf.dtype.itemsize
+    return qb, fb

@@ -1,0 +1,111 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: arbitrary leading batch dims, padding to block multiples, dtype
+plumbing, and interpret-mode auto-detection (interpret=True on CPU — the
+validation mode mandated for this container; compiled Mosaic on real TPU).
+
+The framework's model code calls these entry points; ``mode`` plumbing in
+``repro.models`` decides between exact XLA ops, jnp LUT reference, and these
+kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import int8_matmul as _mm
+from repro.kernels import lut_attention as _attn
+from repro.kernels import lut_gelu as _gelu
+from repro.kernels import lut_softmax as _sm
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), size
+
+
+def lut_gelu(x: jnp.ndarray, *, interp: bool = False,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Piecewise LUT GELU over any-shaped input."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    padded, m0 = _pad_to(flat, 0, 8)
+    padded, n0 = _pad_to(padded, 1, 128)
+    bm = min(_gelu.DEFAULT_BLOCK_M, padded.shape[0])
+    bn = min(_gelu.DEFAULT_BLOCK_N, padded.shape[1])
+    while padded.shape[0] % bm:
+        bm //= 2
+    while padded.shape[1] % bn:
+        bn //= 2
+    out = _gelu.lut_gelu_2d(padded, interp=interp, block_m=bm, block_n=bn,
+                            interpret=_auto_interpret(interpret))
+    return out[:m0, :n0].reshape(shape)
+
+
+def lut_softmax(x: jnp.ndarray, *, fixed: bool = True,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """LUT softmax along the last axis of any-shaped input.
+
+    Padding lanes are filled with a very negative score: they land in the
+    z=10 clip bin and contribute e^{-10} each; we slice them away before
+    returning (their contribution to the sum is the same leak the paper's
+    own clip has for off-range scores).
+    """
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    padded, m0 = _pad_to(flat, 0, 8)
+    out = _sm.lut_softmax_2d(padded, fixed=fixed,
+                             interpret=_auto_interpret(interpret))
+    return out[:m0].reshape(shape)
+
+
+def int8_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray, *, x_exp: int,
+                w_exp: int, out_exp: int | None = None,
+                residual_bits: int = 32,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Quantised matmul -> dequantised f32 (contract matches ref.int8_matmul)."""
+    m, k = x_int.shape
+    k2, n = w_int.shape
+    xp, _ = _pad_to(x_int, 0, 8)
+    xp, _ = _pad_to(xp, 1, 128)
+    wp, _ = _pad_to(w_int, 0, 128)
+    wp, _ = _pad_to(wp, 1, 128)
+    acc_exp = x_exp + w_exp
+    out_exp = acc_exp if out_exp is None else out_exp
+    bm = 128
+    while xp.shape[0] % bm:
+        bm //= 2
+    out = _mm.int8_matmul_raw(
+        xp, wp, shift=acc_exp - out_exp, out_int16=(residual_bits == 16),
+        block_m=bm, interpret=_auto_interpret(interpret))
+    return out[:m, :n].astype(jnp.float32) * (2.0 ** (-out_exp))
+
+
+def lut_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, use_lut: bool = True,
+                  scale: float | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Flash attention with LUT-exp softmax; [B,H,L,D] GQA layout."""
+    lq, lk = q.shape[2], k.shape[2]
+    block_q = _attn.DEFAULT_BQ
+    block_k = _attn.DEFAULT_BK
+    while lq % min(block_q, lq):
+        block_q //= 2
+    while lk % min(block_k, lk):
+        block_k //= 2
+    return _attn.lut_attention(
+        q, k, v, causal=causal, use_lut=use_lut, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=_auto_interpret(interpret))

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-level specification its kernel is tested against
+(tests/kernels/*): same LUT contents, same index math, same accumulation
+widths — only the tiling differs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx, lut as lutlib, quant
+
+
+def lut_softmax(x: jnp.ndarray, *, fixed: bool = True,
+                range_reduce: bool = True) -> jnp.ndarray:
+    """Row softmax over the last axis via the paper's LUT pipeline."""
+    return approx.softmax_lut(x, axis=-1, fixed=fixed, range_reduce=range_reduce)
+
+
+def lut_gelu(x: jnp.ndarray, *, interp: bool = False) -> jnp.ndarray:
+    return approx.gelu_lut(x, interp=interp)
+
+
+def int8_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray, *, x_exp: int,
+                w_exp: int, out_exp: int | None = None,
+                residual_bits: int = 32) -> jnp.ndarray:
+    """INT8 x INT8 -> INT32 accumulate -> shift-rescale (paper eq 9 epilogue).
+
+    Returns float32 dequantised output (the framework-facing contract).
+    """
+    q = quant.qmatmul(quant.QTensor(x_int, x_exp), quant.QTensor(w_int, w_exp),
+                      out_exponent=out_exp, residual_bits=residual_bits)
+    return q.dequantize()
+
+
+def masked_lut_softmax(s: jnp.ndarray, mask: jnp.ndarray | None) -> jnp.ndarray:
+    """LUT softmax with *structural* masking: masked scores never enter the
+    numerator sum (mirrors the C pipeline, which only computes valid
+    entries) — avoids the e^{-10} clip leak that -inf masking would cause.
+    """
+    bank = lutlib.make_lut_bank()
+    s = s.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    sm = s if mask is None else jnp.where(mask, s, neg)
+    m = jnp.max(sm, axis=-1, keepdims=True)
+    z = jnp.clip(m - s, 0.0, lutlib.EXP_RANGE)
+    num = jnp.take(jnp.asarray(bank.exp_f32),
+                   jnp.clip((z * lutlib.BINS_PER_UNIT).astype(jnp.int32),
+                            0, lutlib.N_EXP_ENTRIES - 1))
+    if mask is not None:
+        num = jnp.where(mask, num, 0.0)
+    return num / jnp.sum(num, axis=-1, keepdims=True)
+
+
+def lut_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, softmax_mode: str = "lut",
+                  scale: float | None = None) -> jnp.ndarray:
+    """Reference scaled-dot-product attention with LUT softmax (eq 1 + eq 10).
+
+    q: [B, Hq, Lq, D], k/v: [B, Hkv, Lk, D] with Hq % Hkv == 0 (GQA).
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, lq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    lk = k.shape[2]
+    mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq) if causal else None
+    if softmax_mode == "exact":
+        sm = s if mask is None else jnp.where(mask, s, jnp.finfo(jnp.float32).min)
+        p = jax.nn.softmax(sm, axis=-1)
+    else:
+        p = masked_lut_softmax(s, mask)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, lq, d).astype(q.dtype)

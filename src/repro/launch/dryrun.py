@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this harness:
+  1. builds the *deployable* step program (steps.build_step_program),
+     lowers and compiles it against the production mesh, and records
+     ``compiled.memory_analysis()``  -> proves the sharding fits HBM;
+  2. (single-pod only) lowers the while-free cost-component programs
+     (steps.cost_programs) and combines  sum_i  mult_i x cost_i  into HLO
+     FLOPs / bytes / collective-bytes — the scan-aware accounting from
+     DESIGN.md §4 (XLA cost_analysis counts while bodies once);
+  3. derives the three roofline terms (compute / memory / collective) from
+     v5e constants and writes everything to results/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force] [--list]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.launch import mesh as meshlib
+from repro.launch import steps
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)[\s(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Result-shape bytes per collective kind (per device, per invocation).
+
+    Documented proxy: the bytes of each collective's *result* shape — for
+    all-reduce this equals the operand; for all-gather it is the gathered
+    result (total data landed per device); for reduce-scatter the scattered
+    shard.  Collectives inside while bodies appear once (hence the
+    component decomposition).
+    """
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        out[op] = out.get(op, 0) + _shape_bytes(m.group("type"))
+    return out
+
+
+_CONVERT_RE = re.compile(r"=\s+f32\[([0-9,]+)\][^=]*?\bconvert\(")
+
+
+def cpu_convert_overhead(hlo_text: str, min_bytes: float = 2.5e8) -> int:
+    """Bytes of large f32 copies of bf16 tensors created by XLA:CPU's
+    bf16-dot lowering (converts hoisted out of while loops).  These do not
+    exist on TPU (native bf16 MXU); subtracted to form the TPU-adjusted
+    peak.  Counted once per distinct shape that (a) is produced by an f32
+    convert, (b) also exists as a bf16 tensor, (c) exceeds min_bytes.
+    """
+    f32_shapes = set(_CONVERT_RE.findall(hlo_text))
+    overhead = 0
+    for dims in f32_shapes:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if 4 * n < min_bytes:
+            continue
+        if f"bf16[{dims}]" in hlo_text:
+            overhead += 4 * n
+    return overhead
+
+
+def cost_of(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": coll,
+    }
+
+
+def combine(components: list) -> dict:
+    tot = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    detail = []
+    for name, mult, c in components:
+        for k in tot:
+            tot[k] += mult * c[k]
+        detail.append({"name": name, "multiplier": mult, **c})
+    tot["components"] = detail
+    return tot
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (N_active for MoE), 2*N*tokens decode."""
+    p_sds = steps.params_shape(cfg)
+    total = active = 0
+    flat = jax.tree_util.tree_flatten_with_path(p_sds)[0]
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = "/".join(str(k) for k in path)
+        if cfg.family == "moe" and any(w in keys for w in
+                                       ("w_gate", "w_up", "w_down")) \
+                and "shared" not in keys and "blocks" in keys:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    n_eff = active
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    if shape.kind == "train":
+        return 6.0 * n_eff * tokens
+    return 2.0 * n_eff * tokens
+
+
+def roofline(cost: dict, n_chips: int) -> dict:
+    """cost_analysis numbers are per-device (verified), so terms divide by
+    per-chip rates directly."""
+    compute_s = cost["flops"] / meshlib.PEAK_FLOPS_BF16
+    memory_s = cost["bytes"] / meshlib.HBM_BW
+    coll_s = cost["collective_bytes"] / meshlib.ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant}
+
+
+def run_cell(arch: str, shape, *, mesh_kind: str, force: bool = False,
+             with_cost: bool = True, tag: str = "") -> dict:
+    entry = registry.get(arch)
+    cfg = entry.config
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fname = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape.name}__{mesh_kind}{tag}.json")
+    if os.path.exists(fname) and not force:
+        with open(fname) as f:
+            return json.load(f)
+
+    if shape.name in entry.skips:
+        rec = {"arch": arch, "shape": shape.name, "mesh": mesh_kind,
+               "skipped": entry.skips[shape.name]}
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    prog = steps.build_step_program(cfg, shape, mesh)
+    lowered = steps.lower_program(prog, mesh)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print(compiled.memory_analysis())       # spec: proves it fits
+    conv_overhead = cpu_convert_overhead(compiled.as_text())
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes_est": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+        "cpu_convert_overhead_bytes": int(conv_overhead),
+        "peak_bytes_tpu_adjusted": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes
+                                       - conv_overhead),
+    }
+    full_cost = cost_of(compiled)
+    print({k: v for k, v in full_cost.items() if k != "collectives"})
+    rec = {
+        "arch": arch, "shape": shape.name, "mesh": mesh_kind,
+        "n_chips": int(n_chips),
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "fits_hbm": mem["peak_bytes_tpu_adjusted"] <= 16e9,
+        "fits_hbm_raw": mem["peak_bytes_est"] <= 16e9,
+        "full_program_cost_raw": full_cost,   # while bodies counted once!
+    }
+
+    if with_cost and mesh_kind == "single":
+        comps = []
+        for cp in steps.cost_programs(cfg, shape, mesh):
+            c = cost_of(steps.lower_program(cp, mesh).compile())
+            comps.append((cp.name, cp.multiplier, c))
+        cost = combine(comps)
+        rec["cost"] = cost
+        rec["model_flops"] = model_flops(cfg, shape)
+        rec["model_to_hlo"] = (rec["model_flops"] / n_chips
+                               / max(cost["flops"], 1.0))
+        rec["roofline"] = roofline(cost, n_chips)
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else registry.ASSIGNED
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        entry = registry.get(arch)
+        for shape in entry.shapes:
+            if args.shape and shape.name != args.shape:
+                continue
+            for mk in meshes:
+                label = f"{arch} x {shape.name} x {mk}"
+                if args.list:
+                    print(label, "(skip)" if shape.name in entry.skips else "")
+                    continue
+                print(f"=== {label} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind=mk,
+                                   force=args.force,
+                                   with_cost=not args.no_cost)
+                    if "skipped" in rec:
+                        print("  skipped:", rec["skipped"])
+                    else:
+                        print(
+                            f"  ok: peak/device = "
+                            f"{rec['memory']['peak_bytes_est']/1e9:.2f} GB "
+                            f"(TPU-adj "
+                            f"{rec['memory'].get('peak_bytes_tpu_adjusted', rec['memory']['peak_bytes_est'])/1e9:.2f})"
+                            + (f", dominant={rec['roofline']['dominant']}"
+                               if "roofline" in rec else ""))
+                except Exception:
+                    failures.append(label)
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

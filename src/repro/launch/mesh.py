@@ -1,0 +1,42 @@
+"""Production mesh construction (assignment spec, DESIGN.md §3).
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import (see dryrun.py) and everything else sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples / CPU)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh ('pod' included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# v5e hardware constants for the roofline (assignment spec)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                 # B/s per chip
+ICI_BW = 50e9                  # B/s per link

@@ -1,0 +1,1 @@
+from repro.models import encdec, kwt, layers, moe, rwkv, ssm, transformer  # noqa: F401

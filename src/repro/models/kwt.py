@@ -1,0 +1,93 @@
+"""The Keyword Transformer (paper §II-III): KWT-1 and KWT-Tiny.
+
+ViT-style *post-norm* encoder over MFCC spectrogram patches (Fig 1):
+  X [B, F, T] -> per-time-step patches [B, T, F] -> linear proj to d
+  -> prepend class token -> + learned positional embeddings
+  -> DEPTH transformer blocks (eq 1-6) -> class-token head (eq 8).
+
+KWT-Tiny: INPUT_DIM [16,26], PATCH [16,1], DIM 12, DEPTH 1, HEADS 1,
+MLP_DIM 24, DIM_HEAD 8, SEQLEN 27, 2 classes (Table III).  The attention
+inner dim (HEADS*DIM_HEAD = 8) differs from DIM=12 — handled by
+cfg.head_dim.  LayerNorm + GELU + biases everywhere, exactly the paper's
+C library op set (Table VI).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def seqlen(cfg) -> int:
+    return cfg.input_dim[1] + 1          # T time patches + class token
+
+
+def init_params(cfg, key):
+    f, t = cfg.input_dim
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    p = {
+        "proj_w": L.he(ks[0], (f, d), 1.0, dt),
+        "proj_b": jnp.zeros((d,), dt),
+        "cls": jnp.zeros((d,), dt),
+        "pos": L.he(ks[1], (t + 1, d), 0.02, dt),
+        "blocks": [  # depth <= 12: explicit list, no scan needed
+            {"ln1": L.norm_params(cfg), "ln2": L.norm_params(cfg),
+             "attn": L.attention_params(cfg, ks[3 + i]),
+             "mlp": L.mlp_params(cfg, jax.random.fold_in(ks[3 + i], 7))}
+            for i in range(cfg.n_layers)],
+        "head_w": L.he(ks[2], (d, cfg.n_classes), 1.0, dt),
+        "head_b": jnp.zeros((cfg.n_classes,), dt),
+    }
+    return p
+
+
+def param_specs(cfg):
+    return {
+        "proj_w": P(None, None), "proj_b": P(None), "cls": P(None),
+        "pos": P(None, None),
+        "blocks": [{"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg),
+                    "attn": L.attention_specs(cfg),
+                    "mlp": L.mlp_specs(cfg)} for _ in range(cfg.n_layers)],
+        "head_w": P(None, None), "head_b": P(None),
+    }
+
+
+def forward(params, mfcc, cfg):
+    """mfcc [B, F, T] -> logits [B, n_classes]."""
+    b = mfcc.shape[0]
+    x = jnp.swapaxes(mfcc.astype(jnp.dtype(cfg.dtype)), 1, 2)   # [B,T,F]
+    x = jnp.einsum("btf,fd->btd", x, params["proj_w"]) + params["proj_b"]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    for bp in params["blocks"]:
+        # post-norm residual blocks (paper §II eqs 1-6), full attention
+        a, _ = L.apply_attention(bp["attn"], x, cfg,
+                                 positions=jnp.arange(x.shape[1]),
+                                 causal=False)
+        x = L.apply_norm(bp["ln1"], x + a, cfg)
+        f = L.apply_mlp(bp["mlp"], x, cfg)
+        x = L.apply_norm(bp["ln2"], x + f, cfg)
+    return (jnp.einsum("bd,dc->bc", x[:, 0], params["head_w"])
+            + params["head_b"]).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg):
+    logits = forward(params, batch["mfcc"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params, batch, cfg):
+    logits = forward(params, batch["mfcc"], cfg)
+    return jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,378 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, (gated) MLP.
+
+Functional style: ``*_params(cfg, key)`` builds a pytree of weights,
+``*_specs(cfg)`` builds the *same-structured* tree of PartitionSpecs
+(FSDP over 'data' x TP over 'model'; DESIGN.md §3), ``apply_*`` runs the
+math.  The paper's technique enters through ``cfg.softmax_mode`` /
+``cfg.act_approx`` (LUT approximations) and ``cfg.quant`` (int8 weights).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import approx
+
+# Mesh axis conventions (see launch/mesh.py):
+FSDP = "data"     # parameter shard axis (ZeRO-3 style)
+TP = "model"      # tensor-parallel axis
+
+
+def fsdp_axis(cfg):
+    """Weight shard axis/axes.  pure_fsdp: ZeRO-3 over the whole mesh
+    (no TP) — optimal for small archs where TP activation psums dominate
+    (hillclimb H1).  tp_only: TP-resident weights, no FSDP gathers —
+    optimal for decode, where per-layer weight all-gathers dominate the
+    collective term (hillclimb H3)."""
+    if cfg.pure_fsdp:
+        return ("data", "model")
+    if cfg.tp_only:
+        return None
+    return FSDP
+
+
+def tp_axis(cfg):
+    return None if cfg.pure_fsdp else TP
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def he(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    return (jax.random.normal(key, shape) * (scale / np.sqrt(fan_in))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_specs(cfg):
+    if cfg.norm == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    return {"scale": P(None)}
+
+
+def apply_norm(p, x, cfg, eps=1e-6):
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        # paper eqs (4)-(5): mean/variance normalise, then gamma/beta.
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(_dtype(cfg))
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * p["scale"]).astype(_dtype(cfg))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions [S] (or [B,S]) -> cos/sin tables [..., S, head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., S, H, D]; cos/sin broadcastable [..., S, 1, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / qkv-bias / sliding window / KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg, key):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he(ks[0], (d, h * dh), 1.0, dt),
+        "wk": he(ks[1], (d, kv * dh), 1.0, dt),
+        "wv": he(ks[2], (d, kv * dh), 1.0, dt),
+        "wo": he(ks[3], (h * dh, d), 1.0, dt),
+    }
+    if cfg.qkv_bias or cfg.bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((kv * dh,), dt)
+        p["bv"] = jnp.zeros((kv * dh,), dt)
+    if cfg.bias:
+        p["bo"] = jnp.zeros((d,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def attention_specs(cfg):
+    f, t = fsdp_axis(cfg), tp_axis(cfg)
+    s = {"wq": P(f, t), "wk": P(f, t), "wv": P(f, t),
+         "wo": P(t, f)}
+    if cfg.qkv_bias or cfg.bias:
+        s.update({"bq": P(t), "bk": P(t), "bv": P(t)})
+    if cfg.bias:
+        s["bo"] = P(None)
+    if cfg.qk_norm:
+        s.update({"q_norm": P(None), "k_norm": P(None)})
+    return s
+
+
+def _rms(x, scale, eps=1e-6):
+    x = x.astype(jnp.float32)
+    return (x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+            * scale)
+
+
+Q_CHUNK = 512       # query-chunked XLA attention: bounds the score matrix
+                    # (512: worst-case f32 tile at 32k keys stays ~2.7 GB)
+
+
+def _sdpa_block(q, k, v, cfg, *, q0, k0, q_offset, kv_len_valid, causal):
+    """One [qc, kc] tile of masked attention.  q [B,qc,H,D]; k/v [B,kc,KV,D].
+
+    q0/k0: static tile offsets within the (chunked) sequence;
+    q_offset: (possibly traced) absolute position of sequence start.
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    # operands stay in model dtype; f32 ACCUMULATION via
+    # preferred_element_type (MXU-native).  An explicit .astype(f32) on
+    # k/v makes XLA hoist a full-precision copy of the whole stacked KV
+    # cache out of the layer scan (measured +3.8 GB/device on deepseek).
+    qf = q.reshape(b, sq, kv, g, dh)
+    acc_dt = jnp.dtype(cfg.scores_dtype)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                   preferred_element_type=acc_dt)
+    s = s * jnp.asarray(dh ** -0.5, acc_dt)
+    qpos = jnp.asarray(q_offset) + q0 + jnp.arange(sq)   # [sq]
+    kpos = k0 + jnp.arange(sk)                           # [sk]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = jnp.logical_and(mask, qpos[:, None] >= kpos[None, :])
+    if cfg.sliding_window and causal:
+        # ring-buffer (causal=False) paths enforce the window by overwrite;
+        # position-based banding only applies to contiguous layouts.
+        mask = jnp.logical_and(
+            mask, kpos[None, :] > qpos[:, None] - cfg.sliding_window)
+    if kv_len_valid is not None:
+        mask = jnp.logical_and(mask, (kpos < jnp.asarray(kv_len_valid))[None, :])
+    mask = mask[None, None, None]                   # broadcast over b, kv, g
+    p = approx.masked_softmax(s, mask, mode=cfg.softmax_mode)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def sdpa(q, k, v, cfg, *, q_offset, kv_len_valid, causal=True):
+    """Masked GQA attention, XLA path, query-chunked.
+
+    Long sequences are processed in static query chunks so the live score
+    tile is [qc, k_window] instead of [Sq, Sk]; with a sliding window the
+    key range of each chunk is statically sliced -> banded compute (the
+    sub-quadratic path hymba's long shapes rely on).  Chunking applies only
+    when q_offset is the static 0 (prefill/train); decode (Sq small) takes
+    the single-tile path.
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    if sq <= Q_CHUNK:
+        return _sdpa_block(q, k, v, cfg, q0=0, k0=0, q_offset=q_offset,
+                           kv_len_valid=kv_len_valid, causal=causal)
+    assert isinstance(q_offset, int) and q_offset == 0, \
+        "chunked attention assumes prefill/train (static positions)"
+    outs = []
+    for q0 in range(0, sq, Q_CHUNK):
+        qc = q[:, q0:q0 + Q_CHUNK]
+        # static key window for this chunk (absolute positions are
+        # left-aligned: qpos == kpos at the same index)
+        khi = min(sk, q0 + qc.shape[1]) if causal else sk
+        klo = max(0, q0 - cfg.sliding_window + 1) if cfg.sliding_window else 0
+        outs.append(_sdpa_block(
+            qc, k[:, klo:khi], v[:, klo:khi], cfg, q0=q0, k0=klo,
+            q_offset=0, kv_len_valid=kv_len_valid, causal=causal))
+    return jnp.concatenate(outs, axis=1)
+
+
+def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
+                    kv_len_valid=None, causal=True):
+    """Returns (out, new_cache).  cache = dict(k=[B,S,KV,D], v=...) or None.
+
+    Ring-buffer caches (hybrid sliding window) pass causal=False plus an
+    explicit ``kv_len_valid``: every live slot is a valid past key and the
+    window property is enforced by overwrite.
+    """
+    b, sq, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, sq, h, dh)
+    k = k.reshape(b, sq, kv, dh)
+    v = v.reshape(b, sq, kv, dh)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"]).astype(x.dtype)
+        k = _rms(k, p["k_norm"]).astype(x.dtype)
+    if cfg.use_rope:
+        cos, sin = rope_tables(positions, dh, cfg.rope_theta)
+        cos, sin = cos[..., :, None, :], sin[..., :, None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = sdpa(q, k, v, cfg, q_offset=0, kv_len_valid=kv_len_valid,
+                   causal=causal)
+        new_cache = None
+    elif _kv_quantized(cfg):
+        idx = cache_index
+        kq, kscale = _q8_vec(k)
+        vq, vscale = _q8_vec(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["ks"], kscale, (0, idx, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["vs"], vscale, (0, idx, 0))
+        valid = (idx + sq) if kv_len_valid is None else kv_len_valid
+        q_off = idx if sq <= Q_CHUNK else 0
+        out = sdpa(q, _q8_vec_decode(ck, cks, x.dtype),
+                   _q8_vec_decode(cv, cvs, x.dtype), cfg, q_offset=q_off,
+                   kv_len_valid=valid, causal=causal)
+        new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs}
+        out = jnp.einsum("bsf,fd->bsd", out.reshape(b, sq, h * dh), p["wo"])
+        if "bo" in p:
+            out = out + p["bo"]
+        return out.astype(x.dtype), new_cache
+    else:
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        # barrier: stops XLA (notably the CPU bf16-dot lowering) from
+        # hoisting f32 converts through the DUS into the scan's ys buffer,
+        # which would keep a full-precision copy of the stacked KV cache.
+        ck_use, cv_use = jax.lax.optimization_barrier((ck, cv))
+        valid = (idx + sq) if kv_len_valid is None else kv_len_valid
+        # Multi-token cache writes beyond Q_CHUNK are prefills of a *fresh*
+        # cache (index 0): a static offset enables chunked/banded attention.
+        # (Serve drivers chunk incremental prefills to <= Q_CHUNK tokens.)
+        q_off = idx if sq <= Q_CHUNK else 0
+        out = sdpa(q, ck_use, cv_use, cfg, q_offset=q_off,
+                   kv_len_valid=valid, causal=causal)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, sq, h * dh), p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out.astype(x.dtype), new_cache
+
+
+def _kv_quantized(cfg) -> bool:
+    return bool(cfg.quant and cfg.quant.quantize_kv_cache)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=None):
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    if _kv_quantized(cfg):
+        # paper eq 9 applied to the KV cache: int8 values + per-vector
+        # power-of-2 scale exponents (stored as f32 scales)
+        return {"k": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+                "ks": jnp.ones((batch, max_len, kv), jnp.float32),
+                "v": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+                "vs": jnp.ones((batch, max_len, kv), jnp.float32)}
+    dt = dtype or _dtype(cfg)
+    return {"k": jnp.zeros((batch, max_len, kv, dh), dt),
+            "v": jnp.zeros((batch, max_len, kv, dh), dt)}
+
+
+def _q8_vec(x):
+    """Per-(token, kv-head) power-of-2 int8 quantisation of [B,S,KV,D]."""
+    maxabs = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    e = jnp.ceil(jnp.log2(jnp.maximum(maxabs, 1e-30) / 127.0))
+    scale = jnp.exp2(e)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _q8_vec_decode(q, scale, dt):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
+
+
+def kv_cache_specs(cfg, dp=("data",), tp_size=16):
+    """Batch over DP; KV heads over TP when divisible by the TP size,
+    otherwise the cache SEQUENCE dim is TP-sharded (sequence-parallel KV:
+    decode attention then parallelises over cache length — the decode
+    bottleneck is cache bandwidth, so this is also the perf-correct
+    layout for GQA archs with few KV heads)."""
+    if cfg.n_kv_heads % tp_size == 0:
+        s = {"k": P(dp, None, TP, None), "v": P(dp, None, TP, None)}
+        if _kv_quantized(cfg):
+            s.update({"ks": P(dp, None, TP), "vs": P(dp, None, TP)})
+        return s
+    s = {"k": P(dp, TP, None, None), "v": P(dp, TP, None, None)}
+    if _kv_quantized(cfg):
+        s.update({"ks": P(dp, TP, None), "vs": P(dp, TP, None)})
+    return s
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper eq 6: FFN(x) = act(xW1 + b1)W2 + b2; gated for SiLU-family)
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg, key, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.gated_mlp:
+        return {"w_gate": he(ks[0], (d, f), 1.0, dt),
+                "w_up": he(ks[1], (d, f), 1.0, dt),
+                "w_down": he(ks[2], (f, d), 1.0, dt)}
+    p = {"w1": he(ks[0], (d, f), 1.0, dt), "w2": he(ks[1], (f, d), 1.0, dt)}
+    if cfg.bias:
+        p["b1"] = jnp.zeros((f,), dt)
+        p["b2"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_specs(cfg):
+    f, t = fsdp_axis(cfg), tp_axis(cfg)
+    if cfg.gated_mlp:
+        return {"w_gate": P(f, t), "w_up": P(f, t),
+                "w_down": P(t, f)}
+    s = {"w1": P(f, t), "w2": P(t, f)}
+    if cfg.bias:
+        s.update({"b1": P(t), "b2": P(None)})
+    return s
+
+
+def apply_mlp(p, x, cfg):
+    act = approx.activation(cfg.activation, cfg.act_approx)
+    if cfg.gated_mlp:
+        gate = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        return jnp.einsum("bsf,fd->bsd", (gate * up).astype(x.dtype),
+                          p["w_down"]).astype(x.dtype)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    if "b1" in p:
+        h = h + p["b1"]
+    h = act(h).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    if "b2" in p:
+        out = out + p["b2"]
+    return out.astype(x.dtype)

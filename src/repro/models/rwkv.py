@@ -1,0 +1,294 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — rwkv6-3b.
+
+Time-mix recurrence per head (head_dim=64):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (w_t in (0,1), per channel)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t data-dependent (LoRA on the decay, the Finch hallmark).
+
+Computed in chunks of ``CHUNK`` tokens: within a chunk the pairwise decay
+factor exp(cum_t - cum_j) is materialised as an exact log-space difference
+tensor [B,H,c,c,Dh] (c=16 keeps it ~3 MB/device) — numerically exact, no
+decay clamping; across chunks a ``lax.scan`` carries S.  ``chunk_body`` is
+exported while-free so the dry-run can cost it precisely (cost_analysis
+counts while bodies once; see DESIGN.md §4).
+
+The paper's technique hooks: RWKV has **no softmax** in time-mix
+(LUT-softmax inapplicable — DESIGN.md §Arch-applicability); channel-mix's
+ReLU^2 is polynomial; the receptance sigmoid uses the bounded-domain LUT
+when cfg.act_approx != "exact"; int8 PTQ applies to all projections.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import approx
+from repro.models import layers as L
+
+CHUNK = 16
+HEAD_DIM = 64
+LORA_DIM = 64
+
+
+def n_heads(cfg) -> int:
+    """Head count, padded to a TP multiple when cfg.rwkv_head_pad (§Perf H2:
+    40 heads cannot shard over model=16 -> r/k/v/lw tensors replicate and
+    all-gather; zero-initialised pad heads are function-preserving)."""
+    h = cfg.d_model // HEAD_DIM
+    if cfg.rwkv_head_pad:
+        h = -(-h // 16) * 16
+    return h
+
+
+def _pad_cols(w, inner, d_out):
+    """Zero-pad a [*, inner_real] projection to [*, d_out] (pad heads)."""
+    if w.shape[-1] == d_out:
+        return w
+    pad = jnp.zeros(w.shape[:-1] + (d_out - w.shape[-1],), w.dtype)
+    return jnp.concatenate([w, pad], axis=-1)
+
+
+def _sigmoid(x, cfg):
+    return (approx.sigmoid_lut(x) if cfg.act_approx != "exact"
+            else jax.nn.sigmoid(x.astype(jnp.float32)))
+
+
+def time_mix_params(cfg, key):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    h = n_heads(cfg)
+    di = h * HEAD_DIM                 # inner width (padded when head_pad)
+    return {
+        # static token-shift interpolation vectors (mu_r/k/v/w/g)
+        "mu": jnp.full((5, d), 0.5, jnp.float32),
+        **({"wrkvg": jnp.concatenate(
+                [_pad_cols(L.he(ks[i], (d, d), 1.0, dt), d, di)
+                 for i in range(4)], axis=1)}   # [d, 4*di] fused projection
+           if cfg.rwkv_fused_proj else
+           {"wr": _pad_cols(L.he(ks[0], (d, d), 1.0, dt), d, di),
+            "wk": _pad_cols(L.he(ks[1], (d, d), 1.0, dt), d, di),
+            "wv": _pad_cols(L.he(ks[2], (d, d), 1.0, dt), d, di),
+            "wg": _pad_cols(L.he(ks[3], (d, d), 1.0, dt), d, di)}),
+        "wo": jnp.concatenate([
+            L.he(ks[4], (d, d), 1.0, dt),
+            jnp.zeros((di - d, d), dt)], axis=0) if di != d
+        else L.he(ks[4], (d, d), 1.0, dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((di,), -5.0, jnp.float32),
+        "wA": L.he(ks[5], (d, LORA_DIM), 1.0, jnp.float32),
+        "wB": _pad_cols(L.he(ks[6], (LORA_DIM, d), 0.1, jnp.float32), d, di),
+        "u": jnp.zeros((h, HEAD_DIM), jnp.float32),   # bonus
+        "ln_x": jnp.ones((di,), jnp.float32),         # per-head group norm
+    }
+
+
+def time_mix_specs(cfg):
+    tp = L.TP if cfg.rwkv_head_pad else L.TP   # proj out dims always TP-able
+    hspec = L.TP if cfg.rwkv_head_pad else None  # padded heads shard over TP
+    proj = ({"wrkvg": P(L.FSDP, tp)} if cfg.rwkv_fused_proj else
+            {"wr": P(L.FSDP, tp), "wk": P(L.FSDP, tp),
+             "wv": P(L.FSDP, tp), "wg": P(L.FSDP, tp)})
+    return {"mu": P(None, None), **proj,
+            "wo": P(tp, L.FSDP),
+            "w0": P(tp), "wA": P(None, None), "wB": P(None, tp),
+            "u": P(hspec, None), "ln_x": P(tp)}
+
+
+def channel_mix_params(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {"mu": jnp.full((2, d), 0.5, jnp.float32),
+            "wk": L.he(ks[0], (d, f), 1.0, dt),
+            "wv": L.he(ks[1], (f, d), 1.0, dt),
+            "wr": L.he(ks[2], (d, d), 1.0, dt)}
+
+
+def channel_mix_specs(cfg):
+    f, t = L.fsdp_axis(cfg), L.tp_axis(cfg)
+    return {"mu": P(None, None), "wk": P(f, t),
+            "wv": P(t, f), "wr": P(f, t)}
+
+
+def _token_shift(x, x_prev):
+    """x [B,S,D]; x_prev [B,1,D] (last token of previous segment)."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def chunk_body(S, chunk, u):
+    """One chunk of the wkv recurrence.  While-free; exported for costing.
+
+    S [B,H,Dk,Dv]; chunk = dict(r,k,v [B,H,c,Dh], lw [B,H,c,Dh] = log w).
+    Returns (S_new, y [B,H,c,Dh]).
+    """
+    r, k, v, lw = chunk["r"], chunk["k"], chunk["v"], chunk["lw"]
+    cum = jnp.cumsum(lw, axis=2)                      # inclusive  [B,H,c,D]
+    cumx = cum - lw                                   # exclusive
+    # inter-chunk: y_t += (r_t . e^{cumx_t}) @ S
+    y = jnp.einsum("bhtd,bhde->bhte", r * jnp.exp(cumx), S)
+    # intra-chunk: exact log-space pairwise decay, strictly lower-triangular
+    diff = cumx[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,H,c,c,D]
+    c = r.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, None, :, :, None]
+    amat = jnp.sum(jnp.where(tri, jnp.exp(diff), 0.0)
+                   * r[:, :, :, None, :] * k[:, :, None, :, :], axis=-1)
+    # diagonal bonus term: A[t,t] = sum_d r u k
+    adiag = jnp.einsum("bhtd,hd,bhtd->bht", r, u, k)
+    amat = amat + jnp.eye(c)[None, None] * adiag[:, :, :, None]
+    y = y + jnp.einsum("bhtj,bhje->bhte", amat, v)
+    # state update: S' = e^{cum_c} . S + sum_j (k_j e^{cum_c - cum_j}) v_j
+    total = cum[:, :, -1:, :]                          # [B,H,1,D]
+    S_new = (jnp.exp(total[:, :, 0, :, None]) * S
+             + jnp.einsum("bhjd,bhje->bhde", k * jnp.exp(total - cum), v))
+    return S_new, y
+
+
+def wkv_scan(r, k, v, lw, u, S0):
+    """Chunked scan over time.  r/k/v/lw [B,H,S,Dh] -> y, S_final.
+
+    Handles arbitrary S: full chunks go through ``lax.scan``; the
+    remainder (and S < CHUNK, e.g. decode) is one direct chunk_body call.
+    """
+    b, h, s, dh = r.shape
+    main = (s // CHUNK) * CHUNK
+    S = S0
+    parts = []
+    if main:
+        nc = main // CHUNK
+        xs = jax.tree.map(
+            lambda a: a[:, :, :main].reshape(b, h, nc, CHUNK, dh)
+            .transpose(2, 0, 1, 3, 4),
+            {"r": r, "k": k, "v": v, "lw": lw})
+
+        def body(S, chunk):
+            S, y = chunk_body(S, chunk, u)
+            return S, y
+
+        S, ys = jax.lax.scan(body, S, xs)             # ys [nc,B,H,c,Dh]
+        parts.append(ys.transpose(1, 2, 0, 3, 4).reshape(b, h, main, dh))
+    if s > main:
+        tail = {kk: a[:, :, main:] for kk, a in
+                {"r": r, "k": k, "v": v, "lw": lw}.items()}
+        S, y = chunk_body(S, tail, u)
+        parts.append(y)
+    y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=2)
+    return y, S
+
+
+def wkv_naive(r, k, v, lw, u, S0):
+    """Step-by-step oracle for tests: same math, one token at a time."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,Dk,Dv]
+        y = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, y
+
+    xs = jax.tree.map(lambda a: a.transpose(2, 0, 1, 3), (r, k, v, lw))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3), S
+
+
+def apply_time_mix(p, x, cfg, state):
+    """state = dict(S [B,H,Dk,Dv], x_prev [B,1,D]); returns (out, state)."""
+    b, s, d = x.shape
+    h = n_heads(cfg)
+    xx = _token_shift(x, state["x_prev"])
+    xf, xxf = x.astype(jnp.float32), xx.astype(jnp.float32)
+    mr, mk, mv, mw, mg = [p["mu"][i] for i in range(5)]
+    dt = x.dtype
+    if "wrkvg" in p:
+        # fused projection: the 4 per-tensor token-shift mixes are stacked
+        # on a new leading axis and contracted in ONE matmul -> one TP
+        # psum instead of four (§Perf H2 it3)
+        mixed = jnp.stack([_mix(xf, xxf, m).astype(dt)
+                           for m in (mr, mk, mv, mg)], axis=0)  # [4,B,S,D]
+        di = p["wrkvg"].shape[1] // 4
+        w4 = p["wrkvg"].reshape(p["wrkvg"].shape[0], 4, di)
+        out4 = jnp.einsum("nbsd,dnf->nbsf", mixed, w4)
+        r, k, v, g = out4[0], out4[1], out4[2], out4[3]
+    else:
+        r = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mr).astype(dt), p["wr"])
+        k = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mk).astype(dt), p["wk"])
+        v = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mv).astype(dt), p["wv"])
+        g = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mg).astype(dt), p["wg"])
+    xw = _mix(xf, xxf, mw)
+    lw_raw = p["w0"] + jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    lw = -jnp.exp(lw_raw.astype(jnp.float32))          # log w_t  (< 0)
+
+    di = h * HEAD_DIM
+
+    def heads(a):
+        return a.reshape(b, s, h, HEAD_DIM).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    y, S = wkv_scan(heads(r), heads(k), heads(v), heads(lw), p["u"], state["S"])
+    y = y.transpose(0, 2, 1, 3)
+    # per-head group norm + gate
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = (y.reshape(b, s, di) * p["ln_x"]).astype(dt)
+    y = y * _sigmoid(g, cfg).astype(dt)
+    out = jnp.einsum("bsd,df->bsf", y, p["wo"])
+    return out, {"S": S, "x_prev": x[:, -1:, :]}
+
+
+def apply_channel_mix(p, x, cfg, state):
+    xx = _token_shift(x, state["x_prev"])
+    xf, xxf = x.astype(jnp.float32), xx.astype(jnp.float32)
+    mk, mr = p["mu"][0], p["mu"][1]
+    dt = x.dtype
+    k = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mk).astype(dt), p["wk"])
+    k = jnp.square(jnp.maximum(k.astype(jnp.float32), 0.0)).astype(dt)  # ReLU^2
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    rr = jnp.einsum("bsd,df->bsf", _mix(xf, xxf, mr).astype(dt), p["wr"])
+    out = _sigmoid(rr, cfg).astype(dt) * v
+    return out, {"x_prev": x[:, -1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def block_params(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_params(cfg), "ln2": L.norm_params(cfg),
+            "tmix": time_mix_params(cfg, k1),
+            "cmix": channel_mix_params(cfg, k2)}
+
+
+def block_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg),
+            "tmix": time_mix_specs(cfg), "cmix": channel_mix_specs(cfg)}
+
+
+def apply_block(bp, x, cfg, state):
+    h, s1 = apply_time_mix(bp["tmix"], L.apply_norm(bp["ln1"], x, cfg), cfg,
+                           state["tmix"])
+    x = x + h
+    h, s2 = apply_channel_mix(bp["cmix"], L.apply_norm(bp["ln2"], x, cfg), cfg,
+                              state["cmix"])
+    return x + h, {"tmix": s1, "cmix": s2}
+
+
+def init_layer_state(cfg, batch):
+    d = cfg.d_model
+    h = n_heads(cfg)
+    return {
+        "tmix": {"S": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+                 "x_prev": jnp.zeros((batch, 1, d), jnp.dtype(cfg.dtype))},
+        "cmix": {"x_prev": jnp.zeros((batch, 1, d), jnp.dtype(cfg.dtype))},
+    }
+
+
+def state_specs(cfg, dp=("data",)):
+    hspec = L.TP if cfg.rwkv_head_pad else None
+    return {
+        "tmix": {"S": P(dp, hspec, None, None), "x_prev": P(dp, None, None)},
+        "cmix": {"x_prev": P(dp, None, None)},
+    }

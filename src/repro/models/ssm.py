@@ -1,0 +1,215 @@
+"""Selective SSM (Mamba-style) + Hymba hybrid block (hymba-1.5b).
+
+Hymba runs attention and SSM heads *in parallel* inside one layer
+(arXiv:2411.13676): the block output is the mean of the per-branch
+normalised outputs.  The attention half uses a sliding window
+(cfg.sliding_window), giving the sub-quadratic long_500k path together
+with the O(1)-state mamba half.
+
+The selective scan uses the same chunked log-space-exact formulation as
+rwkv.py (diff-tensor inside the chunk, ``lax.scan`` across chunks,
+while-free ``mamba_chunk_body`` exported for dry-run costing).
+
+Technique hooks: SiLU / softplus run through the bounded-domain LUT path
+when cfg.act_approx != "exact" (DESIGN.md §3); attention softmax through
+``approx.masked_softmax``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import approx
+from repro.models import layers as L
+
+CHUNK = 16
+
+
+def mamba_params(cfg, key):
+    d = cfg.d_model                  # d_inner == d_model (parallel-head budget)
+    n = cfg.ssm_state
+    dt_rank = cfg.dt_rank or max(d // 16, 1)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": L.he(ks[0], (d, 2 * d), 1.0, dt),
+        "conv_w": L.he(ks[1], (cfg.conv_width, d), 1.0, jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "x_proj": L.he(ks[2], (d, dt_rank + 2 * n), 1.0, dt),
+        "dt_proj": L.he(ks[3], (dt_rank, d), 1.0, jnp.float32),
+        "dt_bias": jnp.full((d,), -4.0, jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d, 1))),
+        "D": jnp.ones((d,), jnp.float32),
+        "out_proj": L.he(ks[4], (d, d), 1.0, dt),
+    }
+
+
+def mamba_specs(cfg):
+    return {"in_proj": P(L.FSDP, L.TP), "conv_w": P(None, L.TP),
+            "conv_b": P(L.TP), "x_proj": P(L.TP, None),
+            "dt_proj": P(None, L.TP), "dt_bias": P(L.TP),
+            "A_log": P(L.TP, None), "D": P(L.TP),
+            "out_proj": P(L.TP, L.FSDP)}
+
+
+def mamba_chunk_body(h, chunk, A=None):
+    """One chunk of the selective scan.  While-free; exported for costing.
+
+    h [B,D,N]; chunk = dict(la, dbx [B,c,D,N], C [B,c,N])  — or, to avoid
+    materialising [B,S,D,N] over the whole sequence (measured 27 GB/device
+    at hymba prefill_32k), dict(delta, xin [B,c,D], bt, C [B,c,N]) with A
+    [D,N], from which la/dbx are built per chunk.
+    Returns (h_new, y [B,c,D]).
+    """
+    if "la" in chunk:
+        la, dbx, C = chunk["la"], chunk["dbx"], chunk["C"]
+    else:
+        delta, xin, bt, C = (chunk["delta"], chunk["xin"], chunk["bt"],
+                             chunk["C"])
+        la = delta[..., None] * A[None, None]                # [B,c,D,N]
+        dbx = (delta * xin)[..., None] * bt[:, :, None, :]
+    cum = jnp.cumsum(la, axis=1)                        # inclusive [B,c,D,N]
+    # inter: y_t += C_t . (e^{cum_t} (.) h)
+    y = jnp.einsum("btn,btdn,bdn->btd", C, jnp.exp(cum), h)
+    # intra: exact pairwise decay, inclusive lower triangle (j <= t)
+    c = la.shape[1]
+    diff = cum[:, :, None] - cum[:, None, :]            # [B,c,c,D,N]
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None, None]
+    w = jnp.where(tri, jnp.exp(diff), 0.0)
+    y = y + jnp.einsum("btn,bjdn,btjdn->btd", C, dbx, w)
+    total = cum[:, -1:]                                 # [B,1,D,N]
+    h_new = (jnp.exp(total[:, 0]) * h
+             + jnp.einsum("bjdn->bdn", dbx * jnp.exp(total - cum)))
+    return h_new, y
+
+
+def ssm_scan(delta, xin, bt, C, A, h0):
+    """delta/xin [B,S,D], bt/C [B,S,N], A [D,N] -> y [B,S,D], h_final.
+
+    Arbitrary S: full chunks via ``lax.scan``, remainder direct.  The
+    [B,c,D,N] decay tensors are built per chunk inside the body so the
+    whole-sequence [B,S,D,N] tensor never exists.
+    """
+    b, s, d = delta.shape
+    n = bt.shape[-1]
+    main = (s // CHUNK) * CHUNK
+    h = h0
+    parts = []
+
+    def chunkify(a, nc):
+        return a[:, :main].reshape((b, nc, CHUNK) + a.shape[2:]) \
+            .transpose((1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    if main:
+        nc = main // CHUNK
+        xs = {"delta": chunkify(delta, nc), "xin": chunkify(xin, nc),
+              "bt": chunkify(bt, nc), "C": chunkify(C, nc)}
+
+        def body(h, chunk):
+            h, y = mamba_chunk_body(h, chunk, A)
+            return h, y
+
+        h, ys = jax.lax.scan(body, h, xs)               # ys [nc,B,c,D]
+        parts.append(ys.transpose(1, 0, 2, 3).reshape(b, main, d))
+    if s > main:
+        h, y = mamba_chunk_body(
+            h, {"delta": delta[:, main:], "xin": xin[:, main:],
+                "bt": bt[:, main:], "C": C[:, main:]}, A)
+        parts.append(y)
+    y = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return y, h
+
+
+def ssm_naive(la, dbx, C, h0):
+    """Token-at-a-time oracle for tests."""
+    def step(h, inp):
+        la_t, dbx_t, c_t = inp
+        h = jnp.exp(la_t) * h + dbx_t
+        return h, jnp.einsum("bn,bdn->bd", c_t, h)
+
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (la, dbx, C))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def apply_mamba(p, x, cfg, state):
+    """x [B,S,D]; state = dict(h [B,D,N], conv [B,K-1,D])."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    kw = cfg.conv_width
+    xz = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv as kw shifted adds
+    xpad = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)
+    conv = sum(xpad[:, i:i + s] * p["conv_w"][i] for i in range(kw)) + p["conv_b"]
+    new_conv = xpad[:, -(kw - 1):] if kw > 1 else state["conv"]
+    xc = approx.silu(conv, mode=cfg.act_approx).astype(x.dtype)
+    dbn = jnp.einsum("bsd,df->bsf", xc, p["x_proj"]).astype(jnp.float32)
+    dt_rank = p["dt_proj"].shape[0]
+    dtr, B_t, C_t = jnp.split(dbn, [dt_rank, dt_rank + n], axis=-1)
+    delta = approx.softplus(dtr @ p["dt_proj"] + p["dt_bias"], mode=cfg.act_approx)
+    A = -jnp.exp(p["A_log"])                            # [D,N]
+    y, h = ssm_scan(delta, xc.astype(jnp.float32), B_t, C_t, A, state["h"])
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * approx.silu(z.astype(jnp.float32), mode=cfg.act_approx)
+    out = jnp.einsum("bsd,df->bsf", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": h, "conv": new_conv.astype(jnp.dtype(cfg.dtype))}
+
+
+def init_mamba_state(cfg, batch):
+    d, n, kw = cfg.d_model, cfg.ssm_state, cfg.conv_width
+    return {"h": jnp.zeros((batch, d, n), jnp.float32),
+            "conv": jnp.zeros((batch, kw - 1, d), jnp.dtype(cfg.dtype))}
+
+
+def mamba_state_specs(cfg, dp=("data",)):
+    return {"h": P(dp, L.TP, None), "conv": P(dp, None, L.TP)}
+
+
+# ---------------------------------------------------------------------------
+# Hymba hybrid block: parallel attention + mamba heads
+# ---------------------------------------------------------------------------
+
+def block_params(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.norm_params(cfg), "ln2": L.norm_params(cfg),
+            "attn": L.attention_params(cfg, k1),
+            "mamba": mamba_params(cfg, k2),
+            "out_norm_a": jnp.ones((cfg.d_model,), jnp.float32),
+            "out_norm_m": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": L.mlp_params(cfg, k3)}
+
+
+def block_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg),
+            "attn": L.attention_specs(cfg), "mamba": mamba_specs(cfg),
+            "out_norm_a": P(None), "out_norm_m": P(None),
+            "mlp": L.mlp_specs(cfg)}
+
+
+def _rmsn(x, scale):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True)
+                               + 1e-6) * scale).astype(x.dtype)
+
+
+def apply_block(bp, x, cfg, state, *, positions, cache_index=None,
+                kv_len_valid=None, ring=False):
+    """state = dict(mamba=..., kv=ring cache or None)."""
+    h = L.apply_norm(bp["ln1"], x, cfg)
+    a, new_kv = L.apply_attention(bp["attn"], h, cfg, positions=positions,
+                                  cache=state.get("kv"),
+                                  cache_index=cache_index,
+                                  kv_len_valid=kv_len_valid,
+                                  causal=not ring)
+    m, new_ms = apply_mamba(bp["mamba"], h, cfg, state["mamba"])
+    y = 0.5 * (_rmsn(a, bp["out_norm_a"]) + _rmsn(m, bp["out_norm_m"]))
+    x = x + y
+    h = L.apply_norm(bp["ln2"], x, cfg)
+    x = x + L.apply_mlp(bp["mlp"], h, cfg)
+    new_state = {"mamba": new_ms}
+    if new_kv is not None:
+        new_state["kv"] = new_kv
+    return x, new_state

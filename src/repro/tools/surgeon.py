@@ -1,0 +1,69 @@
+"""Model surgeon: the paper's §III iterative down-scaling methodology.
+
+"Through an iterative approach, the layers with the least impact on
+inference accuracy were removed.  These were found to be the depth
+layers."  This tool scores each transformer block (and optionally MLP
+width) by the loss increase when it is ablated (identity-bypassed) on a
+calibration set, and emits the removal ranking that drives a
+KWT-1 -> KWT-Tiny style shrink.
+
+  PYTHONPATH=src python -m repro.tools.surgeon      # demo on KWT
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kwt
+
+
+def ablation_scores(params, cfg, batches, loss_fn):
+    """Loss increase per ablated block.  Returns [(layer, delta_loss)]."""
+    def mean_loss(p):
+        return float(jnp.mean(jnp.stack(
+            [loss_fn(p, b, cfg) for b in batches])))
+
+    base = mean_loss(params)
+    scores = []
+    for i in range(len(params["blocks"])):
+        ablated = dict(params)
+        blocks = list(params["blocks"])
+        bp = jax.tree.map(jnp.copy, blocks[i])
+        # identity-bypass: zero the block's output projections so the
+        # residual stream passes through unchanged
+        for key in ("attn", "mlp"):
+            sub = dict(bp[key])
+            out_w = "wo" if key == "attn" else ("w2" if "w2" in sub else "w_down")
+            sub[out_w] = jnp.zeros_like(sub[out_w])
+            bp = {**bp, key: sub}
+        blocks = blocks[:i] + [bp] + blocks[i + 1:]
+        ablated["blocks"] = blocks
+        scores.append((i, mean_loss(ablated) - base))
+    return base, sorted(scores, key=lambda kv: kv[1])
+
+
+def shrink_plan(scores, keep: int):
+    """Blocks to delete (lowest impact first), paper §III style."""
+    return [i for i, _ in scores[:len(scores) - keep]]
+
+
+def main():
+    from repro.configs import registry
+    from repro.data import pipeline
+
+    cfg = registry.get("kwt-1").config.with_(n_layers=4)
+    params = kwt.init_params(cfg, jax.random.PRNGKey(0))
+    batches = [pipeline.keyword_batch(0, i, batch=32,
+                                      input_dim=cfg.input_dim,
+                                      n_classes=cfg.n_classes)
+               for i in range(2)]
+    base, scores = ablation_scores(params, cfg, batches, kwt.loss_fn)
+    print(f"base loss {base:.4f}")
+    for i, d in scores:
+        print(f"block {i}: +{d:.5f} loss when ablated")
+    print("remove order for depth=1 target:", shrink_plan(scores, keep=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Core library tests: fixed point, LUTs, approximations, quantisation.
+
+Property tests (hypothesis) pin the system's invariants; exact-value tests
+pin the paper's constants (320-entry tables, 2.69 kB ROM, thresholds
+1.595 / -1.857, Table V exponents).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx, calibrate, fixedpoint as fxp, lut, quant
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# fixed point
+# ---------------------------------------------------------------------------
+
+@given(st.floats(min_value=-127.9, max_value=127.9, allow_nan=False))
+def test_fixed_roundtrip(x):
+    q = fxp.to_fixed(jnp.float32(x))
+    assert abs(float(fxp.to_float(q)) - x) <= 2 ** -24 + abs(x) * 1e-6
+
+
+@given(st.floats(min_value=0, max_value=1), st.floats(min_value=0, max_value=1))
+def test_fixed_mul_bounded_domain(a, b):
+    fa, fb = fxp.to_fixed(jnp.float32(a)), fxp.to_fixed(jnp.float32(b))
+    got = float(fxp.to_float(fxp.fixed_mul(fa, fb)))
+    assert abs(got - a * b) < 1e-6
+
+
+@given(st.integers(min_value=1, max_value=2**31 - 1))
+def test_ilog2(x):
+    assert int(fxp.ilog2(jnp.int32(x))) == int(np.floor(np.log2(x)))
+
+
+def test_fixed_saturation():
+    assert int(fxp.to_fixed(jnp.float32(1e9))) == 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# LUT bank: the paper's ROM, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_rom_matches_paper():
+    bank = lut.make_lut_bank()
+    assert bank.exp_f32.shape == (320,)          # eq 11: 320 entries
+    assert bank.inv_f32.shape == (320,)          # eq 12
+    assert bank.gelu_f32.shape == (32,)          # eq 13: 32 entries
+    assert bank.rom_bytes == (320 + 320 + 32) * 4  # 2.69 kB (paper §VI)
+    assert abs(bank.rom_bytes / 1024 - 2.6) < 0.1
+    # eq 11: LUT1[z*32] ~= e^-z
+    np.testing.assert_allclose(bank.exp_f32[64], np.exp(-2.0), rtol=1e-6)
+    # eq 12: LUT2[z*32 - 1] ~= 1/z
+    np.testing.assert_allclose(bank.inv_f32[63], 0.5, rtol=1e-6)
+
+
+@given(st.floats(min_value=0.01, max_value=120.0))
+def test_reciprocal_range_reduced(v):
+    bank = lut.make_lut_bank()
+    got = float(fxp.to_float(lut.reciprocal_q24(fxp.to_fixed(jnp.float32(v)),
+                                                bank)))
+    assert got == pytest.approx(1.0 / v, rel=0.04)
+
+
+# ---------------------------------------------------------------------------
+# approximations
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 64), st.integers(0, 10**6))
+def test_softmax_lut_close_and_normalised(k, seed):
+    # analytic worst case: floor-binned exp LUT -> (1 - e^{-1/32}) ~ 3.1%
+    # relative per entry; absolute error bounded by ~0.04 after the divide.
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, k)) * 3
+    ref = jax.nn.softmax(x, -1)
+    for mode in ("lut", "lut_fixed"):
+        got = approx.softmax(x, mode=mode)
+        assert float(jnp.max(jnp.abs(got - ref))) < 0.045
+        assert float(jnp.max(jnp.abs(got.sum(-1) - 1))) < 0.045
+
+
+def test_softmax_fixed_long_rows():
+    # beyond the paper's K=27: int32 pre-shift keeps the pipeline sane
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 32768)) * 3
+    got = approx.softmax(x, mode="lut_fixed")
+    assert float(jnp.max(jnp.abs(got.sum(-1) - 1))) < 0.08
+
+
+def test_gelu_thresholds():
+    # paper Fig 7: identity above 1.595, zero below -1.857
+    x = jnp.asarray([2.0, 10.0, -2.0, -10.0, 0.0])
+    y = approx.gelu(x, mode="lut")
+    assert float(y[0]) == 2.0 and float(y[1]) == 10.0
+    assert float(y[2]) == 0.0 and float(y[3]) == 0.0
+    xs = jnp.linspace(-4, 4, 801)
+    err = jnp.abs(approx.gelu(xs, "lut") - jax.nn.gelu(xs, approximate=False))
+    assert float(jnp.max(err)) < 0.09       # dominated by the 1.595 tail cut
+
+
+def test_masked_softmax_structural():
+    s = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    mask = jnp.asarray([[True, True, False, False]])
+    for mode in ("exact", "lut", "lut_fixed"):
+        p = approx.masked_softmax(s, mask, mode)
+        assert float(jnp.abs(p[0, 2]) + jnp.abs(p[0, 3])) == 0.0
+        assert float(jnp.sum(p)) == pytest.approx(1.0, abs=0.02)
+
+
+@given(st.floats(-20, 20))
+def test_silu_softplus_lut(v):
+    x = jnp.float32(v)
+    assert float(jnp.abs(approx.silu(x, "lut") - jax.nn.silu(x))) < 0.06
+    assert float(jnp.abs(approx.softplus(x, "lut") - jax.nn.softplus(x))) < 0.06
+
+
+# ---------------------------------------------------------------------------
+# quantisation (eq 9, Table V)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(3, 6), st.integers(0, 10**6))
+def test_quantize_po2_error_bound(y, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 16)) * 0.4
+    w = jnp.clip(w, -0.9, 0.9)
+    q = quant.quantize_po2(w, y)
+    # floor quantisation: error in [0, 2^-y)
+    err = w - q.dequantize()
+    assert float(jnp.min(err)) >= -1e-6
+    assert float(jnp.max(err)) <= 2.0 ** -y + 1e-6
+
+
+def test_choose_exponent_no_overflow():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64,)) * 0.3
+    y = quant.choose_exponent(w)
+    q = quant.quantize_po2(w, y)
+    # no positive saturation (floor of negatives may legitimately hit -128)
+    assert int(jnp.max(q.values.astype(jnp.int32))) <= 127
+    assert int(jnp.min(q.values.astype(jnp.int32))) >= -128
+    q2 = quant.quantize_po2(w, y + 2)   # over-scaled -> saturates
+    assert int(jnp.max(jnp.abs(q2.values.astype(jnp.int32)))) >= 127
+
+
+def test_qmatmul_matches_float():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (8, 32)) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16)) * 0.1
+    qx, qw = quant.quantize_po2(x, 5), quant.quantize_po2(w, 6)
+    out = quant.qmatmul(qx, qw, residual_bits=32)
+    np.testing.assert_allclose(np.asarray(out.dequantize()),
+                               np.asarray(qx.dequantize() @ qw.dequantize()),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_tree_skips_norms():
+    tree = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    qt = quant.quantize_tree(tree, weight_exponent=6)
+    assert isinstance(qt["w"], quant.QTensor)
+    assert not isinstance(qt["scale"], quant.QTensor)   # paper §IV: LN stays float
+    qb, fb = quant.tree_quantized_bytes(qt)
+    assert qb == 16 and fb == 16
+
+
+def test_calibration_sweep_shape():
+    # tiny linear model, Table V pair format
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 2))}
+    batches = [(jax.random.normal(jax.random.PRNGKey(i), (16, 8)),
+                jnp.zeros((16,), jnp.int32)) for i in range(2)]
+    res = calibrate.sweep_scale_factors(
+        lambda p, x: x @ p["w"], params, batches,
+        pairs=[(3, 3), (4, 4), (5, 5), (6, 5), (6, 6)])   # = Table V rows
+    assert len(res) == 5
+    assert all(0.0 <= r.accuracy <= 1.0 for r in res)

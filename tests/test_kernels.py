@@ -1,0 +1,96 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+(pure-jnp oracle), interpret=True on CPU as mandated."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (37, 300), (128, 128), (5, 27),
+                                   (1, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_gelu_sweep(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+    got = ops.lut_gelu(x)
+    want = ref.lut_gelu(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0, atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("shape", [(4, 27), (13, 99), (8, 320), (3, 1000)])
+@pytest.mark.parametrize("fixed", [True, False])
+def test_lut_softmax_sweep(shape, fixed):
+    x = jax.random.normal(KEY, shape) * 4
+    got = ops.lut_softmax(x, fixed=fixed)
+    want = ref.lut_softmax(x, fixed=fixed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # sanity vs exact softmax
+    assert float(jnp.max(jnp.abs(got - jax.nn.softmax(x, -1)))) < 0.05
+
+
+def test_lut_softmax_fixed_bit_exact_paper_scale():
+    """At the paper's SEQLEN=27 the kernel must match the Q8.24 reference
+    bit-for-bit (same LUT indices, same fixed multiply)."""
+    x = jax.random.normal(KEY, (16, 27)) * 3
+    got = ops.lut_softmax(x, fixed=True)
+    want = ref.lut_softmax(x, fixed=True)
+    assert jnp.array_equal(got, want)
+
+
+@pytest.mark.parametrize("mnk", [(8, 16, 32), (50, 70, 200), (128, 128, 128),
+                                 (1, 5, 7)])
+@pytest.mark.parametrize("residual_bits", [16, 32])
+def test_int8_matmul_sweep(mnk, residual_bits):
+    m, n, k = mnk
+    k1, k2 = jax.random.split(KEY)
+    # small magnitudes so INT16 residuals don't saturate (paper sizing)
+    x = jax.random.randint(k1, (m, k), -16, 16, jnp.int8)
+    w = jax.random.randint(k2, (k, n), -16, 16, jnp.int8)
+    got = ops.int8_matmul(x, w, x_exp=5, w_exp=6, out_exp=7,
+                          residual_bits=residual_bits)
+    want = ref.int8_matmul(x, w, x_exp=5, w_exp=6, out_exp=7,
+                           residual_bits=residual_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,d", [
+    (1, 2, 2, 64, 64, 32),       # MHA square
+    (2, 4, 2, 64, 64, 32),       # GQA
+    (1, 8, 1, 128, 128, 64),     # MQA
+    (2, 4, 2, 1, 64, 32),        # decode
+    (1, 2, 2, 64, 256, 32),      # long kv (multi-tile online softmax)
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_lut_attention_sweep(b, hq, hkv, lq, lk, d, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, lq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, lk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, lk, d), jnp.float32)
+    exact = ops.lut_attention(q, k, v, causal=causal, use_lut=False)
+    r_exact = ref.lut_attention(q, k, v, causal=causal, softmax_mode="exact")
+    np.testing.assert_allclose(np.asarray(exact), np.asarray(r_exact),
+                               rtol=2e-5, atol=2e-5)
+    lut = ops.lut_attention(q, k, v, causal=causal, use_lut=True)
+    r_lut = ref.lut_attention(q, k, v, causal=causal, softmax_mode="lut")
+    # multi-tile online-LUT telescopes differently from single-shot LUT:
+    # bounded by the LUT bin width (1/32) relative error per factor.
+    np.testing.assert_allclose(np.asarray(lut), np.asarray(r_lut),
+                               rtol=0.05, atol=0.05)
+    # and must stay close to exact attention overall
+    assert float(jnp.max(jnp.abs(lut - r_exact))) < 0.06
+
+
+def test_lut_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 32, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 32, 32), jnp.bfloat16)
+    out = ops.lut_attention(q, k, v, causal=True, use_lut=True)
+    assert out.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))

@@ -1,0 +1,175 @@
+"""Training infrastructure: optimizer, checkpointing, data determinism,
+fault-tolerant train loop (crash + resume), quantised serving path."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager
+from repro.configs import registry
+from repro.data import pipeline
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quadratic_setup(int8):
+    hp = adamw.HParams(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                       total_steps=100, int8_moments=int8)
+    params = {"blocks": {"w": jnp.ones((4, 8, 8))},
+              "embed": jnp.ones((8, 8))}
+    return hp, params
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_adamw_descends(int8):
+    hp, params = _quadratic_setup(int8)
+    state = adamw.init(params, hp)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+
+    l0 = float(loss(params))
+    for _ in range(30):
+        grads = jax.grad(loss)(params)
+        params, state, m = adamw.update(grads, state, params, hp)
+    assert float(loss(params)) < 0.5 * l0
+    assert float(m["lr"]) > 0
+
+
+def test_int8_moments_track_f32():
+    hp8, params = _quadratic_setup(True)
+    hpf, _ = _quadratic_setup(False)
+    s8, sf = adamw.init(params, hp8), adamw.init(params, hpf)
+    p8 = pf = params
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x - 3.0)) for x in jax.tree.leaves(p))
+
+    for _ in range(20):
+        p8, s8, _ = adamw.update(jax.grad(loss)(p8), s8, p8, hp8)
+        pf, sf, _ = adamw.update(jax.grad(loss)(pf), sf, pf, hpf)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(p8), jax.tree.leaves(pf)))
+    assert d < 0.05      # int8 moments stay close to the f32 trajectory
+
+
+def test_schedule_warmup_and_decay():
+    hp = adamw.HParams(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(adamw.schedule(jnp.asarray(5), hp)) == pytest.approx(0.5)
+    assert float(adamw.schedule(jnp.asarray(10), hp)) == pytest.approx(1.0, abs=0.02)
+    assert float(adamw.schedule(jnp.asarray(100), hp)) == pytest.approx(
+        hp.min_lr_ratio, abs=0.02)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    manager.save(str(tmp_path), 7, tree)
+    assert manager.latest_step(str(tmp_path)) == 7
+    out = manager.restore(str(tmp_path), 7, jax.tree.map(jnp.zeros_like, tree))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    manager.save(str(tmp_path), 3, tree)
+    # simulate a crash mid-save: tmp dir without manifest
+    os.makedirs(tmp_path / "step_00000009.tmp-dead")
+    # and a renamed dir missing the manifest sentinel
+    os.makedirs(tmp_path / "step_00000005")
+    assert manager.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"a": jnp.ones((100, 100))}
+    t = manager.save(str(tmp_path), 1, tree, blocking=False)
+    t.join()
+    assert manager.latest_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_skippable():
+    a = pipeline.lm_batch(0, 5, global_batch=4, seq_len=16, vocab_size=100)
+    b = pipeline.lm_batch(0, 5, global_batch=4, seq_len=16, vocab_size=100)
+    c = pipeline.lm_batch(0, 6, global_batch=4, seq_len=16, vocab_size=100)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert int(a["tokens"].max()) < 100
+    # labels are next-token shifted
+    kw = pipeline.keyword_batch(0, 0, batch=8)
+    assert kw["mfcc"].shape == (8, 16, 26)
+    assert set(np.asarray(kw["labels"]).tolist()) <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant train loop (crash -> resume)
+# ---------------------------------------------------------------------------
+
+def test_train_crash_and_resume(tmp_path):
+    from repro.launch import train as train_mod
+
+    args = ["--arch", "internlm2-1.8b", "--smoke", "--steps", "8",
+            "--global-batch", "4", "--seq-len", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+    # run 1: crash at step 5 (checkpoints exist for steps 2 and 4)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_mod.main(args + ["--fail-at-step", "5"])
+    assert manager.latest_step(str(tmp_path)) == 4
+    # run 2: resumes from step 4 and completes
+    params_resumed = train_mod.main(args)
+    # reference: uninterrupted run
+    ref = train_mod.main(["--arch", "internlm2-1.8b", "--smoke", "--steps",
+                          "8", "--global-batch", "4", "--seq-len", "16"])
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(params_resumed), jax.tree.leaves(ref)))
+    # deterministic data + exact state restore => identical trajectories
+    assert d < 1e-5
+
+
+def test_train_loss_decreases():
+    from repro.launch import train as train_mod
+    import io, contextlib
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        train_mod.main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "30",
+                        "--global-batch", "8", "--seq-len", "32"])
+    lines = [l for l in buf.getvalue().splitlines() if l.startswith("step")]
+    first = float(lines[0].split("loss")[1].split()[0])
+    last = float(lines[-1].split("loss")[1].split()[0])
+    assert last < first - 0.1
+
+
+# ---------------------------------------------------------------------------
+# quantised serving path (the paper's technique end to end at LM scale)
+# ---------------------------------------------------------------------------
+
+def test_quantized_lm_logits_close():
+    from repro.models import transformer as T
+
+    cfg = registry.get("internlm2-1.8b").smoke
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    ref = T.forward(params, toks, cfg)
+    from repro.core import quant
+    qparams = quant.dequantize_tree(quant.quantize_tree(params, weight_exponent=6))
+    qcfg = cfg.with_(softmax_mode="lut", act_approx="lut")
+    got = T.forward(qparams, toks, qcfg)
+    # ranks should broadly agree even though values shift
+    agree = jnp.mean((jnp.argmax(got, -1) == jnp.argmax(ref, -1)).astype(jnp.float32))
+    assert float(agree) > 0.5
+    assert bool(jnp.all(jnp.isfinite(got)))
