@@ -1,0 +1,3 @@
+"""KWT-Tiny reproduction, grown toward a production-scale jax system."""
+
+from repro import _compat  # noqa: F401  (jax API shims; must import first)

@@ -1,0 +1,65 @@
+"""Forward-compatibility shims for the pinned jax toolchain.
+
+The codebase is written against the jax >= 0.6 sharding spellings —
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)`` — while the baked-in toolchain ships jax 0.4.37, where
+shard_map still lives in ``jax.experimental`` (with ``check_rep`` instead
+of ``check_vma``) and meshes have no axis types (every axis behaves as
+``Auto``).  Importing :mod:`repro` installs the newer spellings; every
+shim is hasattr-guarded so on a jax that already provides the API this
+module does nothing.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_axis_type():
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh():
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types          # 0.4.x meshes are implicitly all-Auto
+        return orig(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map():
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+    jax.shard_map = shard_map
+
+
+def install():
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+
+
+install()

@@ -35,6 +35,15 @@ def softmax_exact(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     return jax.nn.softmax(x.astype(jnp.float32), axis=axis)
 
 
+def _pre_shift(num_q: jnp.ndarray, pre: int) -> jnp.ndarray:
+    """Round-to-nearest right shift of the Q8.24 numerators.  Truncating
+    here instead biases every lane low by ~2^{pre-1}, which deflates the
+    row sum and turns into a +8% normalisation overshoot at K=32k."""
+    if pre <= 0:
+        return num_q
+    return (num_q + (1 << (pre - 1))) >> pre
+
+
 def softmax_lut(x: jnp.ndarray, axis: int = -1, *, fixed: bool = False,
                 range_reduce: bool = True,
                 bank: lutlib.LutBank | None = None) -> jnp.ndarray:
@@ -71,7 +80,7 @@ def softmax_lut(x: jnp.ndarray, axis: int = -1, *, fixed: bool = False,
     z_q = fxp.to_fixed(z)
     num_q = jnp.take(jnp.asarray(bank.exp_q24),
                      lutlib.exp_index_from_q24(z_q))             # in [0, 1]
-    s_q = jnp.sum(num_q >> pre, axis=axis, keepdims=True)         # Q8.(24-pre)
+    s_q = jnp.sum(_pre_shift(num_q, pre), axis=axis, keepdims=True)  # Q8.(24-pre)
     inv_q = lutlib.reciprocal_q24(s_q, bank, range_reduce=range_reduce)
     inv_q = inv_q >> pre                                          # back to Q8.24
     out_q = fxp.fixed_mul(num_q, inv_q)
@@ -132,7 +141,7 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
         num_q = jnp.take(jnp.asarray(bank.exp_q24), lutlib.exp_index_from_q24(z_q))
         if mask is not None:
             num_q = jnp.where(mask, num_q, 0)
-        s_q = jnp.sum(num_q >> pre, axis=-1, keepdims=True)
+        s_q = jnp.sum(_pre_shift(num_q, pre), axis=-1, keepdims=True)
         s_q = jnp.maximum(s_q, 1)
         inv_q = lutlib.reciprocal_q24(s_q, bank) >> pre
         return fxp.to_float(fxp.fixed_mul(num_q, inv_q))

@@ -39,19 +39,22 @@ def sweep_scale_factors(
     weight_exponents: tuple[int, ...] = (3, 4, 5, 6),
     input_exponents: tuple[int, ...] = (3, 4, 5, 6),
     pairs: list[tuple[int, int]] | None = None,
+    rounding: str = "nearest",
 ) -> list[SweepResult]:
     """Reproduce Table V: accuracy per (weight 2^y, input 2^y) pair.
 
     ``apply_fn(params, x) -> logits``.  Batches are (x, labels).
     The paper sweeps (8,8), (16,16), (32,32), (64,32), (64,64); pass those
     via ``pairs`` as exponents [(3,3),(4,4),(5,5),(6,5),(6,6)].
+    ``rounding="floor"`` sweeps with the bit-exact eq-9 cast.
     """
     if pairs is None:
         pairs = [(w, i) for w in weight_exponents for i in input_exponents]
     batches = list(batches)
     results = []
     for wexp, iexp in pairs:
-        qparams = quant.quantize_tree(params, weight_exponent=wexp)
+        qparams = quant.quantize_tree(params, weight_exponent=wexp,
+                                      rounding=rounding)
         fparams = quant.dequantize_tree(qparams)
         qbytes, _ = quant.tree_quantized_bytes(qparams)
         correct = total = 0

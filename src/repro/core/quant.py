@@ -52,13 +52,24 @@ class QTensor:
 
 
 def quantize_po2(w: jnp.ndarray, exponent: int, *, bits: int = 8,
-                 stochastic_key: jax.Array | None = None) -> QTensor:
-    """eq 9: floor(w * 2^y) with saturation to the int range."""
+                 stochastic_key: jax.Array | None = None,
+                 rounding: str = "floor") -> QTensor:
+    """eq 9: floor(w * 2^y) with saturation to the int range.
+
+    ``rounding="nearest"`` adds the half-LSB offset before the floor (an
+    adder in front of the truncating shift in hardware terms): floor's
+    systematic -LSB/2 bias is correlated across every weight and measurably
+    shifts whole-model logits; the offset removes it at zero ROM cost.
+    """
     lo, hi = (INT8_MIN, INT8_MAX) if bits == 8 else (INT16_MIN, INT16_MAX)
     scaled = w.astype(jnp.float32) * (2.0 ** exponent)
+    if rounding not in ("floor", "nearest"):
+        raise ValueError(f"unknown rounding {rounding!r}")
     if stochastic_key is not None:  # beyond-paper: stochastic rounding option
         noise = jax.random.uniform(stochastic_key, w.shape)
         q = jnp.floor(scaled + noise)
+    elif rounding == "nearest":
+        q = jnp.floor(scaled + 0.5)
     else:
         q = jnp.floor(scaled)
     dtype = jnp.int8 if bits == 8 else jnp.int16
@@ -109,18 +120,22 @@ def dequantize_tree(tree: Pytree) -> Pytree:
 
 
 def quantize_tree(params: Pytree, *, weight_exponent: int = 6,
-                  bits: int = 8, skip_norm_scales: bool = True) -> Pytree:
+                  bits: int = 8, skip_norm_scales: bool = True,
+                  rounding: str = "nearest") -> Pytree:
     """PTQ a parameter pytree with one global weight exponent (Table V row).
 
     LayerNorm/RMSNorm scale+shift vectors stay float (paper §IV) — detected
-    as rank<=1 leaves when ``skip_norm_scales``.
+    as rank<=1 leaves when ``skip_norm_scales``.  Whole-model PTQ rounds to
+    nearest (half-LSB offset before the eq-9 floor): the bare floor's
+    correlated -LSB/2 bias visibly degrades LM logit ranks at the Table V
+    exponents; pass ``rounding="floor"`` for the bit-exact paper cast.
     """
     def one(leaf):
         if not isinstance(leaf, jnp.ndarray) or not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
         if skip_norm_scales and leaf.ndim <= 1:
             return leaf
-        return quantize_po2(leaf, weight_exponent, bits=bits)
+        return quantize_po2(leaf, weight_exponent, bits=bits, rounding=rounding)
 
     return jax.tree.map(one, params)
 

@@ -1,0 +1,11 @@
+"""Distribution layer between the model code and the mesh.
+
+:mod:`repro.dist.ctx`       — sharding context: model code declares its
+                              activation boundaries, the context resolves
+                              them to NamedSharding constraints on-mesh
+                              and to no-ops everywhere else.
+:mod:`repro.dist.compress`  — int8 error-feedback gradient sync for the
+                              slow (cross-pod) all-reduce.
+"""
+
+from repro.dist import compress, ctx  # noqa: F401

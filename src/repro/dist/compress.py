@@ -1,0 +1,106 @@
+"""int8-compressed gradient synchronisation with error feedback.
+
+The paper's core bet — int8 payloads with carefully handled scales lose
+almost nothing — applied to the distribution layer: the cross-pod
+gradient all-reduce is the slowest wire in a multi-pod fleet (ICI within
+a pod, DCN between pods), so compress exactly that hop to int8 and carry
+the quantisation residual into the next step (error feedback: the bias
+telescopes across steps, cf. sub-8-bit streaming-KWS training,
+arXiv:2207.06920).
+
+``compressed_grad_sync`` runs a ring all-reduce under ``shard_map``: each
+of the N-1 hops moves the int8 payload plus its f32 scale one position
+around the ring with ``ppermute`` — the compiled HLO moves ``s8`` arrays
+over ``collective-permute`` — and every device accumulates the
+dequantised shards in f32, then divides by the ring size (mean
+semantics, matching a DP grad all-reduce).  Within-pod reduction stays
+full-precision via the normal pjit partitioner; only the slow axis is
+compressed.
+
+Error feedback invariant (per leaf, in f32):
+
+    c_t      = g_t + e_t            # residual-corrected gradient
+    synced_t = mean_ring Q(c_t)     # what the optimizer sees
+    e_{t+1}  = c_t - Q(c_t)         # what the wire dropped
+
+so sum_t synced_t = sum_t g_t + e_0 - e_{T}: the accumulated estimate
+drifts from the exact sum by at most one step's quantisation error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def reduce_axis(mesh) -> str:
+    """The slow axis the compressed sync rings over: 'pod' when present
+    (inter-pod DCN), else the outermost data axis."""
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            return name
+    return mesh.axis_names[0]
+
+
+def quantize_leaf(g):
+    """Symmetric per-tensor int8: values in [-127, 127] + one f32 scale."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(grads):
+    """Zeroed per-leaf f32 residuals, same tree structure as the grads."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _ring_mean(q, scale, axis, n):
+    """Gather-ring all-reduce of one quantised leaf: dequantise + f32
+    accumulate locally at every hop (re-quantising partial sums each hop
+    would compound error; moving the original shards does not)."""
+    acc = dequantize_leaf(q, scale)
+    if n == 1:
+        return acc
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    for _ in range(n - 1):
+        q = jax.lax.ppermute(q, axis, perm)
+        scale = jax.lax.ppermute(scale, axis, perm)
+        acc = acc + dequantize_leaf(q, scale)
+    return acc / n
+
+
+def compressed_grad_sync(grads, err, mesh, axis=None):
+    """Ring-mean ``grads`` over the mesh's slow axis with int8 payloads.
+
+    Returns ``(synced, new_err)``: the dequantised ring mean (same tree /
+    dtypes as ``grads``) and the updated error-feedback state.  ``err``
+    comes from :func:`init_error_state` on step 0 and is threaded through
+    subsequent calls.
+    """
+    axis = axis or reduce_axis(mesh)
+    n = mesh.shape[axis]
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(err)
+    assert len(leaves) == len(err_leaves), \
+        "error state does not match the gradient tree (init_error_state?)"
+
+    def local(gs, es):
+        synced, new_err = [], []
+        for g, e in zip(gs, es):
+            c = g.astype(jnp.float32) + e
+            q, scale = quantize_leaf(c)
+            new_err.append(c - dequantize_leaf(q, scale))
+            synced.append(_ring_mean(q, scale, axis, n).astype(g.dtype))
+        return tuple(synced), tuple(new_err)
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_vma=False)
+    synced, new_err = fn(tuple(leaves), tuple(err_leaves))
+    return (jax.tree.unflatten(treedef, synced),
+            jax.tree.unflatten(treedef, new_err))

@@ -32,10 +32,12 @@ from repro.launch import steps
 from repro.models import layers as L
 
 
-def quantize_params(params, cfg):
-    """PTQ per paper §IV: int8 weights at 2^6, norms/biases stay float."""
+def quantize_params(params, cfg, rounding="nearest"):
+    """PTQ per paper §IV: int8 weights at 2^6, norms/biases stay float.
+    ``rounding="floor"`` reproduces the eq-9 cast bit-exactly."""
     q = cfg.quant or __import__("repro.configs.base", fromlist=["QuantConfig"]).QuantConfig()
-    qtree = quant.quantize_tree(params, weight_exponent=q.weight_exponent)
+    qtree = quant.quantize_tree(params, weight_exponent=q.weight_exponent,
+                                rounding=rounding)
     return quant.dequantize_tree(qtree)
 
 

@@ -97,7 +97,15 @@ def main(argv=None):
 
         start_step = 0
         if args.ckpt_dir:
+            # resume from the newest step complete in BOTH trees: the opt
+            # save is async, so a crash can leave params one step ahead
             latest = manager.latest_step(args.ckpt_dir)
+            latest_opt = manager.latest_step(args.ckpt_dir + "/opt")
+            if latest is not None and latest_opt is None:
+                print(f"[restore] params checkpoint at step {latest} has no "
+                      "complete optimizer state — starting from step 0")
+            latest = None if latest_opt is None or latest is None \
+                else min(latest, latest_opt)
             if latest is not None:
                 print(f"[restore] resuming from step {latest}")
                 params = manager.restore(args.ckpt_dir, latest, params)

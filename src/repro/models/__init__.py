@@ -1,1 +1,20 @@
-from repro.models import encdec, kwt, layers, moe, rwkv, ssm, transformer  # noqa: F401
+"""Model zoo.  Submodules resolve lazily (PEP 562) so that
+``from repro.models import kwt`` — the paper's actual model — never drags
+in the dist-dependent LM stack (transformer/encdec/moe) and its heavier
+import chain."""
+
+import importlib
+
+_SUBMODULES = ("encdec", "kwt", "layers", "moe", "rwkv", "ssm", "transformer")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        module = importlib.import_module(f"repro.models.{name}")
+        globals()[name] = module
+        return module
+    raise AttributeError(f"module 'repro.models' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

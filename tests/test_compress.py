@@ -1,0 +1,76 @@
+"""Single-device coverage of the repro.dist.compress math: the int8
+quantise/dequantise round trip, the error-state pytree contract, and the
+error-feedback conservation identity — no 8-device subprocess harness
+needed (that lives in test_dist.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist import compress
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_int8_roundtrip_error_bound():
+    g = jax.random.normal(KEY, (128, 64)) * 0.3
+    q, scale = compress.quantize_leaf(g)
+    assert q.dtype == jnp.int8
+    assert scale.shape == ()
+    back = compress.dequantize_leaf(q, scale)
+    # round-to-nearest: absolute error <= scale/2 = max|g| / 254
+    max_err = float(jnp.max(jnp.abs(back - g)))
+    assert max_err <= 0.5 * float(scale) + 1e-7
+    rel = max_err / float(jnp.max(jnp.abs(g)))
+    assert rel < 1.0 / 253.0
+
+
+def test_quantize_saturates_at_127():
+    g = jnp.asarray([-10.0, 0.0, 10.0])
+    q, scale = compress.quantize_leaf(g)
+    assert int(jnp.max(q.astype(jnp.int32))) == 127
+    assert int(jnp.min(q.astype(jnp.int32))) == -127
+    assert float(scale) == pytest.approx(10.0 / 127.0)
+
+
+def test_error_state_pytree_structure():
+    grads = {"w": jnp.ones((3, 2), jnp.bfloat16),
+             "blocks": {"b": jnp.zeros((5,)), "c": jnp.ones((2, 2, 2))}}
+    err = compress.init_error_state(grads)
+    assert jax.tree.structure(err) == jax.tree.structure(grads)
+    for g, e in zip(jax.tree.leaves(grads), jax.tree.leaves(err)):
+        assert e.shape == g.shape
+        assert e.dtype == jnp.float32          # residuals accumulate in f32
+        assert float(jnp.max(jnp.abs(e))) == 0.0
+
+
+def test_sync_conservation_single_device():
+    """synced + new_err == grads + err exactly (nothing lost, only moved):
+    the telescoping identity the 16-step drift bound relies on."""
+    mesh = jax.make_mesh((1,), ("data",))
+    grads = {"w": jax.random.normal(KEY, (32, 16)) * 0.1}
+    err = compress.init_error_state(grads)
+    synced, err1 = compress.compressed_grad_sync(grads, err, mesh)
+    assert float(jnp.max(jnp.abs(
+        synced["w"] + err1["w"] - grads["w"]))) < 1e-7
+    # second step: residual-corrected, still conservative
+    g2 = {"w": grads["w"] * 1.7}
+    synced2, err2 = compress.compressed_grad_sync(g2, err1, mesh)
+    assert float(jnp.max(jnp.abs(
+        synced2["w"] + err2["w"] - (g2["w"] + err1["w"])))) < 1e-7
+
+
+def test_sync_relative_error_bound_single_device():
+    mesh = jax.make_mesh((1,), ("data",))
+    grads = {"w": jax.random.normal(KEY, (64, 64))}
+    synced, _ = compress.compressed_grad_sync(
+        grads, compress.init_error_state(grads), mesh)
+    rel = float(jnp.max(jnp.abs(synced["w"] - grads["w"]))) \
+        / float(jnp.max(jnp.abs(grads["w"])))
+    assert rel < 0.02
+
+
+def test_reduce_axis_prefers_pod():
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    assert compress.reduce_axis(mesh) == "pod"
+    assert compress.reduce_axis(jax.make_mesh((1,), ("data",))) == "data"
