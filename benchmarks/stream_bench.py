@@ -1,0 +1,120 @@
+"""Streaming-KWS benchmark: per-hop latency and real-time factor.
+
+Measures the jitted ``stream.engine.stream_step`` (+ detector) server hop
+at increasing concurrent-stream counts, float vs the quantised LUT-fixed
+path, and emits ``BENCH_stream.json``.
+
+RTF (real-time factor) = wall time per hop / audio time per hop: every
+stream delivers ``hop_len`` samples (10 ms) per hop, and the whole packed
+batch must be processed inside that budget regardless of width — RTF < 1
+means the server keeps up with all N streams on this host.
+
+Usage:  PYTHONPATH=src python -m benchmarks.stream_bench \
+            [--streams 1 16 64] [--hops 50] [--out BENCH_stream.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch.serve import quantize_params
+from repro.models import kwt
+from repro.stream import detector as det
+from repro.stream import engine
+from repro.stream import features
+
+
+def bench_one(cfg, fcfg, dcfg, params, n_streams: int, hops: int,
+              chunk_hops: int, seed: int = 0) -> dict:
+    k = chunk_hops
+    chunk = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(seed), (n_streams, k * fcfg.hop_len))
+    state = engine.init_stream_state(cfg, fcfg, n_streams,
+                                     keep_features=False)
+    dstate = det.detector_init(dcfg, n_streams)
+
+    @jax.jit
+    def step(params, state, dstate, chunk):
+        state, logits = engine.stream_step(params, state, chunk, cfg, fcfg)
+        dstate, events = det.detector_step(
+            dstate, engine.posteriors(logits), dcfg, warm=engine.warm(state))
+        return state, dstate, events
+
+    # warm-up: compile + fill the receptive field
+    warm_hops = engine.window_frames(cfg) // k + 2
+    for _ in range(warm_hops):
+        state, dstate, events = step(params, state, dstate, chunk)
+    jax.block_until_ready(events["score"])
+
+    t0 = time.perf_counter()
+    for _ in range(hops):
+        state, dstate, events = step(params, state, dstate, chunk)
+    jax.block_until_ready(events["score"])
+    dt = time.perf_counter() - t0
+
+    per_step_ms = dt / hops * 1e3
+    audio_ms = k * fcfg.hop_len / fcfg.sample_rate * 1e3
+    rtf = per_step_ms / audio_ms
+    return {"streams": n_streams, "chunk_hops": k,
+            "per_step_ms": round(per_step_ms, 4),
+            "rtf": round(rtf, 5),
+            "aggregate_realtime_x": round(n_streams / rtf, 1)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kwt-tiny")
+    ap.add_argument("--streams", type=int, nargs="+", default=[1, 16, 64])
+    ap.add_argument("--hops", type=int, default=50)
+    ap.add_argument("--chunk-hops", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args(argv)
+
+    base = registry.get(args.arch).smoke
+    fcfg = features.FrontendConfig()
+    dcfg = det.DetectorConfig()
+    params = kwt.init_params(base, jax.random.PRNGKey(0))
+
+    modes = {
+        "float": (base, params),
+        "lut_fixed": (base.with_(softmax_mode="lut_fixed", act_approx="lut"),
+                      quantize_params(params, base)),
+    }
+    results = []
+    print("mode,streams,per_step_ms,rtf,aggregate_realtime_x")
+    for mode, (cfg, p) in modes.items():
+        for n in args.streams:
+            r = {"mode": mode,
+                 **bench_one(cfg, fcfg, dcfg, p, n, args.hops,
+                             args.chunk_hops)}
+            results.append(r)
+            print(f"{mode},{n},{r['per_step_ms']},{r['rtf']},"
+                  f"{r['aggregate_realtime_x']}")
+
+    report = {"arch": args.arch,
+              "frontend": {"sample_rate": fcfg.sample_rate,
+                           "frame_len": fcfg.frame_len,
+                           "hop_len": fcfg.hop_len,
+                           "window_frames": engine.window_frames(base)},
+              "results": results}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    worst = max((r["rtf"] for r in results if r["streams"] >= 64),
+                default=None)
+    if worst is not None:
+        ok = worst < 1.0
+        print(f"RTF @ >=64 streams: {worst} ({'OK' if ok else 'OVER BUDGET'})")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -64,3 +64,69 @@ def gsc_eval_set(seed: int, *, n: int, input_dim=(16, 26), n_classes: int = 2,
     return [keyword_batch(seed + 10_000, i, batch=batch, input_dim=input_dim,
                           n_classes=n_classes)
             for i in range(int(np.ceil(n / batch)))]
+
+
+# ---------------------------------------------------------------------------
+# Raw-audio surrogates for the streaming subsystem (repro.stream): the same
+# stateless-seeded contract, one level earlier in the signal chain — the
+# waveform the MFCC frontend (stream/features.py) consumes, instead of the
+# pre-made features above.
+# ---------------------------------------------------------------------------
+
+SAMPLE_RATE = 16_000
+
+
+def _keyword_chirp(n_samples: int, t0, amp, sample_rate=SAMPLE_RATE):
+    """The synthetic "dog" sound: an amplitude-enveloped rising chirp
+    (1->3 kHz), broad-band enough to light up several mel bands."""
+    t = (jnp.arange(n_samples, dtype=jnp.float32) - t0) / sample_rate
+    dur = n_samples / sample_rate
+    f0, f1 = 1000.0, 3000.0
+    phase = 2.0 * jnp.pi * (f0 * t + 0.5 * (f1 - f0) / dur * t * t)
+    env = jnp.square(jnp.sin(jnp.pi * jnp.clip(t / dur, 0.0, 1.0)))
+    return amp * env * jnp.sin(phase)
+
+
+def keyword_audio_batch(seed: int, step: int, *, batch: int,
+                        n_samples: int, n_classes: int = 2,
+                        sample_rate: int = SAMPLE_RATE):
+    """Class-conditional raw audio: label 1 carries the chirp keyword over
+    noise, label 0 is noise alone.  Featurised by ``stream.features.mfcc``
+    this trains KWT end to end from the waveform (paper §III, with audio
+    standing in for the GSC recordings)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (batch,), 0, n_classes)
+    noise = 0.12 * jax.random.normal(k2, (batch, n_samples))
+    amp = 0.5 + 0.2 * jax.random.uniform(k3, (batch, 1))
+    jitter = jax.random.uniform(k4, (batch, 1)) * 0.2 * n_samples
+    chirp = jax.vmap(lambda t0, a: _keyword_chirp(n_samples, t0, a[0],
+                                                  sample_rate))(jitter, amp)
+    audio = noise + jnp.where((labels > 0)[:, None], chirp, 0.0)
+    return {"audio": audio, "labels": labels}
+
+
+def keyword_event_stream(seed: int, stream_id: int, *, n_hops: int,
+                         hop_len: int = 160, event_len_hops: int = 26,
+                         mean_gap_hops: int = 60,
+                         sample_rate: int = SAMPLE_RATE):
+    """An unbounded-stream surrogate: ``n_hops * hop_len`` samples of noise
+    with keyword chirps at random positions.  Host-side numpy (this feeds
+    the serving loop, mirroring ``launch/serve.py``'s request queue).
+
+    Returns ``(audio [n_hops*hop_len] f32, events)`` where ``events`` is a
+    list of (start_hop, end_hop) ground-truth keyword intervals.
+    """
+    rng = np.random.RandomState((seed * 100_003 + stream_id) % (2**31 - 1))
+    n = n_hops * hop_len
+    audio = 0.12 * rng.randn(n).astype(np.float32)
+    events, hop = [], int(rng.randint(10, mean_gap_hops))
+    ev_len = event_len_hops * hop_len
+    while hop + event_len_hops < n_hops:
+        s = hop * hop_len
+        audio[s:s + ev_len] += np.asarray(
+            _keyword_chirp(ev_len, 0.0, 0.5 + 0.2 * rng.rand(), sample_rate))
+        events.append((hop, hop + event_len_hops))
+        hop += event_len_hops + int(rng.randint(mean_gap_hops // 2,
+                                                2 * mean_gap_hops))
+    return audio, events

@@ -125,6 +125,9 @@ def dp_for(shape: ShapeSpec, mesh):
 
 
 def model_module(cfg: ModelConfig):
+    if cfg.family == "kwt":
+        from repro.models import kwt as K
+        return K
     return E if cfg.family == "encdec" else T
 
 
@@ -156,11 +159,19 @@ def _loss(cfg):
     return model_module(cfg).loss_fn
 
 
-def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None):
+def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
+                    sync_mesh=None, sync_per_channel=False):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     Gradient accumulation over ``n_micro`` microbatches via lax.scan;
     grads are averaged in f32, then one AdamW update.
+
+    ``sync_mesh`` enables int8 error-feedback gradient compression on the
+    mesh's slow axis (``dist.compress.compressed_grad_sync``; the ROADMAP
+    follow-up from the repro.dist PR): the step then threads the residual
+    state — ``(params, opt_state, err, batch) -> (params, opt_state, err,
+    metrics)`` with ``err`` from ``compress.init_error_state``.
+    ``sync_per_channel`` selects per-channel payload scales.
     """
     hp = hp or hparams_for(cfg)
     n_micro = n_micro or microbatches(cfg, shape)
@@ -172,29 +183,45 @@ def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None):
             return x.reshape((n_micro, b // n_micro) + x.shape[1:])
         return jax.tree.map(f, batch)
 
-    def train_step(params, opt_state, batch):
+    def compute_grads(params, batch):
         if n_micro == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
-        else:
-            micro = split_micro(batch)
+            return jax.value_and_grad(loss_fn)(params, batch, cfg)
+        micro = split_micro(batch)
 
-            def body(acc, mb):
-                l, g = jax.value_and_grad(loss_fn)(params, mb, cfg)
-                acc = jax.tree.map(
-                    lambda a, gg: a + gg.astype(jnp.float32) / n_micro,
-                    acc, g)
-                return acc, l
+        def body(acc, mb):
+            l, g = jax.value_and_grad(loss_fn)(params, mb, cfg)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n_micro,
+                acc, g)
+            return acc, l
 
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            grads, losses = jax.lax.scan(body, zeros, micro)
-            loss = jnp.mean(losses)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(body, zeros, micro)
+        return jnp.mean(losses), grads
+
+    def finish(loss, grads, opt_state, params):
         new_params, new_opt, metrics = adamw.update(
             grads, opt_state, params, hp, scan_stacked=cfg.scan_layers)
         metrics["loss"] = loss
         return new_params, new_opt, metrics
 
-    return train_step
+    if sync_mesh is None:
+        def train_step(params, opt_state, batch):
+            loss, grads = compute_grads(params, batch)
+            return finish(loss, grads, opt_state, params)
+        return train_step
+
+    from repro.dist import compress
+
+    def train_step_synced(params, opt_state, err, batch):
+        loss, grads = compute_grads(params, batch)
+        grads, err = compress.compressed_grad_sync(
+            grads, err, sync_mesh, per_channel=sync_per_channel)
+        new_params, new_opt, metrics = finish(loss, grads, opt_state, params)
+        return new_params, new_opt, err, metrics
+
+    return train_step_synced
 
 
 def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec):

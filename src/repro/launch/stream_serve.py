@@ -1,0 +1,172 @@
+"""Multi-stream streaming-KWS server (continuous-batching-lite for audio).
+
+The streaming analogue of ``launch/serve.py``: a fixed pool of ``--slots``
+batch lanes, each lane carrying one live audio stream.  Every hop, one
+chunk per lane is packed into a single ``[B, k*hop]`` batch and pushed
+through the jitted ``stream.engine.stream_step`` + ``stream.detector``
+under ``dist.ctx`` sharding; finished streams free their lane, which is
+zeroed (``engine.reset_lane``) and immediately refilled from the queue —
+the step always runs at full batch.
+
+The paper's technique is the same first-class serving flag as offline:
+``--quantize`` applies the eq-9 PTQ weights and switches softmax/GELU to
+the LUT path; streaming logits stay bit-identical to offline inference
+either way (tests/test_stream.py).
+
+Usage (CPU, reduced):
+  PYTHONPATH=src python -m repro.launch.stream_serve --streams 8 --slots 4 \
+      --hops 120 [--quantize] [--train-steps 80]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import pipeline
+from repro.dist import ctx
+from repro.launch import mesh as meshlib
+from repro.launch.serve import quantize_params
+from repro.models import kwt
+from repro.stream import detector as det
+from repro.stream import engine
+from repro.stream import features
+
+
+def train_params(cfg, fcfg, n_steps: int, seed: int):
+    """Quick end-to-end training from raw audio (waveform -> MFCC -> KWT)
+    through the canonical ``steps.make_train_step``, so served detections
+    are meaningful; n_steps=0 returns random init."""
+    params = kwt.init_params(cfg, jax.random.PRNGKey(seed))
+    if n_steps <= 0:
+        return params
+    from repro.configs.base import ShapeSpec
+    from repro.launch import steps
+    from repro.optim import adamw
+    hp = adamw.HParams(lr=3e-3, warmup_steps=max(2, n_steps // 10),
+                       total_steps=n_steps, weight_decay=0.0)
+    opt = adamw.init(params, hp)
+    n = engine.window_frames(cfg) * fcfg.hop_len
+    shape = ShapeSpec("stream_train", engine.window_frames(cfg), 64, "train")
+    step = jax.jit(steps.make_train_step(cfg, shape, hp, n_micro=1))
+    featurize = jax.jit(lambda a: features.mfcc(a, fcfg))
+
+    for i in range(n_steps):
+        raw = pipeline.keyword_audio_batch(seed, i, batch=64, n_samples=n)
+        params, opt, m = step(params, opt, {"mfcc": featurize(raw["audio"]),
+                                            "labels": raw["labels"]})
+    print(f"[train] {n_steps} steps on audio-derived MFCC, "
+          f"final loss {float(m['loss']):.3f}")
+    return params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kwt-tiny")
+    ap.add_argument("--streams", type=int, default=8,
+                    help="total streams to serve")
+    ap.add_argument("--slots", type=int, default=4, help="batch lanes")
+    ap.add_argument("--hops", type=int, default=120,
+                    help="mean stream length in hops")
+    ap.add_argument("--chunk-hops", type=int, default=1,
+                    help="hops ingested per engine step")
+    ap.add_argument("--quantize", action="store_true",
+                    help="paper technique: int8 PTQ weights + LUT softmax/act")
+    ap.add_argument("--train-steps", type=int, default=80,
+                    help="0 = serve a randomly initialised model")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    entry = registry.get(args.arch)
+    cfg = entry.smoke
+    assert cfg.family == "kwt", "streaming serve drives the KWT family"
+    if args.quantize:
+        cfg = cfg.with_(softmax_mode="lut", act_approx="lut")
+    fcfg = features.FrontendConfig()
+    dcfg = det.DetectorConfig()
+    mesh = meshlib.make_host_mesh()
+
+    params = train_params(cfg, fcfg, args.train_steps, args.seed)
+    if args.quantize:
+        params = quantize_params(params, cfg)
+
+    B, k = args.slots, args.chunk_hops
+    chunk_samples = k * fcfg.hop_len
+    queue = list(range(args.streams))
+    rng = np.random.RandomState(args.seed)
+    sources = {}
+    for sid in queue:
+        # whole chunks, at least one (wide --chunk-hops must not floor to 0)
+        hops = max(k, int(rng.randint(args.hops // 2, args.hops * 2))
+                   // k * k)
+        audio, events = pipeline.keyword_event_stream(
+            args.seed, sid, n_hops=hops, hop_len=fcfg.hop_len)
+        sources[sid] = {"audio": audio, "events": events, "hops": hops}
+
+    with mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
+        state = engine.init_stream_state(cfg, fcfg, B, keep_features=False)
+        dstate = det.detector_init(dcfg, B)
+        step = jax.jit(lambda p, s, ds, c: _joint_step(p, s, ds, c, cfg,
+                                                       fcfg, dcfg))
+        reset = jax.jit(lambda s, ds, lane: (
+            engine.reset_lane(s, lane), det.detector_reset_lane(ds, lane)))
+
+        active = [None] * B          # stream id per lane
+        offset = np.zeros(B, np.int64)
+        fired, done, hops_run = [], [], 0
+        t0 = time.time()
+        while len(done) < args.streams:
+            for i in range(B):       # refill free lanes
+                if active[i] is None and queue:
+                    active[i] = queue.pop(0)
+                    offset[i] = 0
+                    state, dstate = reset(state, dstate, i)
+            chunk = np.zeros((B, chunk_samples), np.float32)
+            for i in range(B):
+                if active[i] is not None:
+                    a = sources[active[i]]["audio"]
+                    chunk[i] = a[offset[i]:offset[i] + chunk_samples]
+                    offset[i] += chunk_samples
+            state, dstate, events = step(params, state, dstate,
+                                         jnp.asarray(chunk))
+            hops_run += k
+            fired_now = np.asarray(events["fired"])
+            for i in range(B):
+                sid = active[i]
+                if sid is None:
+                    continue
+                if fired_now[i]:
+                    hop = int(offset[i] // fcfg.hop_len)
+                    fired.append((sid, hop))
+                    print(f"[event] stream {sid} keyword @ "
+                          f"{det.event_time_s(hop, fcfg):.2f}s "
+                          f"(score {float(events['score'][i]):.2f})")
+                if offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
+                    done.append(sid)
+                    active[i] = None
+        dt = time.time() - t0
+        audio_s = sum(s["hops"] for s in sources.values()) \
+            * fcfg.hop_len / fcfg.sample_rate
+        truth = sum(len(s["events"]) for s in sources.values())
+        print(f"served {args.streams} streams ({audio_s:.1f}s audio) in "
+              f"{dt:.2f}s -> {audio_s/dt:.1f}x realtime aggregate; "
+              f"{len(fired)} events fired / {truth} keywords present "
+              f"(quantized={args.quantize})")
+    return fired
+
+
+def _joint_step(params, state, dstate, chunk, cfg, fcfg, dcfg):
+    """One fused server hop: engine + posteriors + detector."""
+    state, logits = engine.stream_step(params, state, chunk, cfg, fcfg)
+    dstate, events = det.detector_step(dstate, engine.posteriors(logits),
+                                       dcfg, warm=engine.warm(state))
+    return state, dstate, events
+
+
+if __name__ == "__main__":
+    main()

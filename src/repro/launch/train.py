@@ -69,6 +69,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="inject a crash at this step (recovery demo)")
+    ap.add_argument("--compressed-grads", action="store_true",
+                    help="int8 error-feedback gradient sync on the mesh's "
+                         "slow axis (dist.compress)")
+    ap.add_argument("--per-channel-scales", action="store_true",
+                    help="per-channel payload scales for --compressed-grads")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -95,26 +100,40 @@ def main(argv=None):
         from repro.optim import adamw
         opt_state = adamw.init(params, hp)
 
+        from repro.dist import compress
+        err = compress.init_error_state(params) if args.compressed_grads \
+            else None
+
         start_step = 0
         if args.ckpt_dir:
-            # resume from the newest step complete in BOTH trees: the opt
-            # save is async, so a crash can leave params one step ahead
-            latest = manager.latest_step(args.ckpt_dir)
-            latest_opt = manager.latest_step(args.ckpt_dir + "/opt")
-            if latest is not None and latest_opt is None:
-                print(f"[restore] params checkpoint at step {latest} has no "
-                      "complete optimizer state — starting from step 0")
-            latest = None if latest_opt is None or latest is None \
-                else min(latest, latest_opt)
+            # resume from the newest step complete in EVERY tree: the opt
+            # save is async, so a crash can leave params one step ahead;
+            # with --compressed-grads the error-feedback residuals are a
+            # third tree (dropping them would break the telescoping
+            # drift bound at every restart)
+            cand = [manager.latest_step(args.ckpt_dir),
+                    manager.latest_step(args.ckpt_dir + "/opt")]
+            if args.compressed_grads:
+                cand.append(manager.latest_step(args.ckpt_dir + "/err"))
+            if cand[0] is not None and any(c is None for c in cand[1:]):
+                print(f"[restore] params checkpoint at step {cand[0]} has no "
+                      "complete optimizer/error state — starting from step 0")
+            latest = None if any(c is None for c in cand) else min(cand)
             if latest is not None:
                 print(f"[restore] resuming from step {latest}")
                 params = manager.restore(args.ckpt_dir, latest, params)
                 opt_state = manager.restore(
                     args.ckpt_dir + "/opt", latest, opt_state)
+                if args.compressed_grads:
+                    err = manager.restore(
+                        args.ckpt_dir + "/err", latest, err)
                 start_step = latest
 
+        sync_mesh = mesh if args.compressed_grads else None
         train_step = jax.jit(
-            steps.make_train_step(cfg, shape, hp, n_micro=1),
+            steps.make_train_step(cfg, shape, hp, n_micro=1,
+                                  sync_mesh=sync_mesh,
+                                  sync_per_channel=args.per_channel_scales),
             donate_argnums=(0, 1))
 
         mon = StragglerMonitor()
@@ -129,7 +148,12 @@ def main(argv=None):
                 seq_len=args.seq_len, vocab_size=cfg.vocab_size) \
                 if cfg.family != "encdec" else _whisper_batch(args, cfg, step)
             t0 = time.time()
-            params, opt_state, metrics = train_step(params, opt_state, batch)
+            if args.compressed_grads:
+                params, opt_state, err, metrics = train_step(
+                    params, opt_state, err, batch)
+            else:
+                params, opt_state, metrics = train_step(params, opt_state,
+                                                        batch)
             loss = float(metrics["loss"])
             dt = time.time() - t0
             mon.observe(step, dt)
@@ -142,6 +166,9 @@ def main(argv=None):
                 if pending is not None:
                     pending.join()
                 manager.save(args.ckpt_dir, step + 1, params, blocking=True)
+                if err is not None:
+                    manager.save(args.ckpt_dir + "/err", step + 1, err,
+                                 blocking=True)
                 pending = manager.save(args.ckpt_dir + "/opt", step + 1,
                                        opt_state, blocking=False)
         if pending is not None:

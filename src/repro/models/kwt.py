@@ -57,11 +57,24 @@ def param_specs(cfg):
     }
 
 
-def forward(params, mfcc, cfg):
-    """mfcc [B, F, T] -> logits [B, n_classes]."""
-    b = mfcc.shape[0]
-    x = jnp.swapaxes(mfcc.astype(jnp.dtype(cfg.dtype)), 1, 2)   # [B,T,F]
-    x = jnp.einsum("btf,fd->btd", x, params["proj_w"]) + params["proj_b"]
+def embed_frames(params, frames, cfg):
+    """Patch-embed time-major frames [B, t, F] -> [B, t, d] (paper Fig 1,
+    per-time-step [16, 1] patches).
+
+    Factored out of :func:`forward` so the streaming engine
+    (``repro.stream.engine``) can embed only newly arrived frames per hop
+    and cache the rest — the einsum contracts over F per frame, so the
+    result for a frame is independent of which other frames share the
+    batch, keeping the streaming path bit-identical to offline.
+    """
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    return jnp.einsum("btf,fd->btd", x, params["proj_w"]) + params["proj_b"]
+
+
+def encode_window(params, x, cfg):
+    """Embedded window [B, T, d] -> logits [B, n_classes]: class token +
+    positions + post-norm blocks + head (paper §II eqs 1-6, 8)."""
+    b = x.shape[0]
     cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
     x = jnp.concatenate([cls, x], axis=1) + params["pos"]
     for bp in params["blocks"]:
@@ -74,6 +87,12 @@ def forward(params, mfcc, cfg):
         x = L.apply_norm(bp["ln2"], x + f, cfg)
     return (jnp.einsum("bd,dc->bc", x[:, 0], params["head_w"])
             + params["head_b"]).astype(jnp.float32)
+
+
+def forward(params, mfcc, cfg):
+    """mfcc [B, F, T] -> logits [B, n_classes]."""
+    x = embed_frames(params, jnp.swapaxes(mfcc, 1, 2), cfg)     # [B,T,d]
+    return encode_window(params, x, cfg)
 
 
 def loss_fn(params, batch, cfg):

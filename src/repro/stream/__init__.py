@@ -1,0 +1,15 @@
+"""repro.stream — always-on streaming KWS (paper §III deployed shape).
+
+Turns the offline KWT + quantised LUT stack into a streaming detector:
+
+  features.py   streaming log-mel/MFCC frontend (framing -> FFT -> mel
+                filterbank -> DCT) with a hop-at-a-time incremental API
+  ring.py       externalized ring-buffer state pytrees (the kws_streaming
+                external-state idiom): pure (state, frames) -> state
+  engine.py     incremental KWT inference, bit-identical to offline
+                ``models.kwt.forward`` on the same window (float + LUT)
+  detector.py   posterior smoothing + hysteresis/refractory triggering
+
+State lives in pytrees, never in Python objects, so serving slots are
+checkpointable and shardable like any other model state.
+"""

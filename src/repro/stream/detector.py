@@ -1,0 +1,88 @@
+"""Keyword event triggering: posterior smoothing + hysteresis + refractory.
+
+Converts the per-hop posteriors of ``engine.stream_step`` into discrete
+keyword events.  Standard streaming-KWS posterior handling: a moving
+average over the last ``smooth_hops`` hops suppresses single-hop spikes;
+a two-threshold hysteresis (fire at ``on_threshold``, release below
+``off_threshold``) stops one keyword utterance firing once per hop; a
+refractory period bounds the event rate even across releases.
+
+Everything is a pure pytree function, batched over lanes — the detector
+state rides in the same jitted server step as the engine state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.stream import ring
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    keyword_class: int = 1        # index of the "dog" class (paper §III)
+    smooth_hops: int = 5          # posterior moving-average window
+    on_threshold: float = 0.75    # fire when smoothed posterior crosses up
+    off_threshold: float = 0.5    # release (re-arm) when it falls below
+    refractory_hops: int = 20     # min hops between fires, even if released
+
+
+def detector_init(dcfg: DetectorConfig, batch: int) -> dict:
+    return {"hist": ring.ring_init(batch, dcfg.smooth_hops, ()),
+            "active": jnp.zeros((batch,), bool),
+            "cooldown": jnp.zeros((batch,), jnp.int32),
+            "warm_hops": jnp.zeros((batch,), jnp.int32),
+            "hop": jnp.zeros((), jnp.int32)}
+
+
+def detector_step(state: dict, probs: jnp.ndarray, dcfg: DetectorConfig,
+                  warm=None) -> tuple[dict, dict]:
+    """One hop: ``probs`` [B, n_classes] -> (state, events).
+
+    ``events = {"fired": [B] bool, "score": [B] smoothed posterior,
+    "hop": scalar hop index}``.  ``warm`` gates lanes whose engine window
+    is still filling (their logits describe zero-padded audio).
+
+    Hysteresis semantics: a fire sets ``active``; the lane cannot fire
+    again until the smoothed posterior *releases* below ``off_threshold``
+    AND the refractory countdown has expired.
+    """
+    hist = ring.ring_push(state["hist"],
+                          probs[:, dcfg.keyword_class][:, None])
+    # mean over the hops actually seen (count < smooth_hops during warm-up;
+    # unwritten slots hold zeros and are excluded by dividing by count)
+    smoothed = jnp.sum(hist["buf"], axis=1) \
+        / jnp.maximum(hist["count"].astype(jnp.float32), 1.0)
+    # a lane may only fire after smooth_hops consecutive *warm* hops: the
+    # history ring also collects posteriors of still-padded windows, and
+    # those must age out before the average is trusted (otherwise a model
+    # that scores silence keyword-like fires at the warm-up boundary)
+    is_warm = jnp.ones_like(state["active"]) if warm is None else warm
+    warm_hops = jnp.where(is_warm, state["warm_hops"] + 1, 0)
+    ready = warm_hops >= dcfg.smooth_hops
+    cooldown = jnp.maximum(state["cooldown"] - 1, 0)
+    fired = (ready & ~state["active"] & (cooldown == 0)
+             & (smoothed >= dcfg.on_threshold))
+    active = jnp.where(fired, True,
+                       state["active"] & (smoothed > dcfg.off_threshold))
+    cooldown = jnp.where(fired, dcfg.refractory_hops, cooldown)
+    hop = state["hop"] + 1
+    new = {"hist": hist, "active": active, "cooldown": cooldown,
+           "warm_hops": warm_hops, "hop": hop}
+    return new, {"fired": fired, "score": smoothed, "hop": hop}
+
+
+def detector_reset_lane(state: dict, lane) -> dict:
+    """Re-arm one lane on server slot refill."""
+    return {"hist": ring.ring_reset_lane(state["hist"], lane),
+            "active": state["active"].at[lane].set(False),
+            "cooldown": state["cooldown"].at[lane].set(0),
+            "warm_hops": state["warm_hops"].at[lane].set(0),
+            "hop": state["hop"]}
+
+
+def event_time_s(hop, fcfg) -> float:
+    """Hop index -> stream timestamp in seconds (end of the hop)."""
+    return float(hop) * fcfg.hop_len / fcfg.sample_rate

@@ -1,0 +1,107 @@
+"""Incremental KWT inference over a hop-synchronous stream.
+
+Per hop, only the newly arrived time-patches are embedded
+(``models.kwt.embed_frames`` on [B, k, F]) and pushed into a ring of
+cached patch embeddings; the encoder (``models.kwt.encode_window``) then
+runs on the assembled [B, T, d] window.  Because the patch embedding
+contracts over F independently per frame, the assembled window is
+bit-identical to embedding the whole window at once — so streaming
+logits are **bit-identical** to the offline ``jax.jit(models.kwt.forward)``
+program on the same audio window (both sides compiled, as production
+always is), in the float path and in every LUT path
+(``cfg.softmax_mode`` / ``cfg.act_approx`` flow through unchanged; the
+``--quantize`` serving pipeline of ``launch/serve.py`` applies to the
+params before they reach this module).
+
+State is one pytree (frontend tail + feature ring + embedding ring):
+``stream_step`` is pure ``(params, state, chunk) -> (state, logits)`` —
+the deployment contract for millions of checkpointable serving slots.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models import kwt
+from repro.stream import features
+from repro.stream import ring
+
+
+def window_frames(cfg) -> int:
+    """The model's receptive field in frames (T of input_dim [F, T])."""
+    return cfg.input_dim[1]
+
+
+def init_stream_state(cfg, fcfg: features.FrontendConfig, batch: int,
+                      keep_features: bool = True) -> dict:
+    """Fresh streaming state for ``batch`` hop-synchronous streams.
+
+    The embed ring caches per-frame patch embeddings so each hop re-embeds
+    only its new frames.  ``keep_features`` additionally keeps the raw MFCC
+    history ring (offline-parity oracles, calibration taps); production
+    servers pass False to drop that scatter + state from the hot path.
+    """
+    t, f = window_frames(cfg), cfg.input_dim[0]
+    state = {"frontend": features.frontend_init(fcfg, batch),
+             "embed": ring.ring_init(batch, t, (cfg.d_model,),
+                                     jnp.dtype(cfg.dtype))}
+    if keep_features:
+        state["feat"] = ring.ring_init(batch, t, (f,), jnp.float32)
+    return state
+
+
+def stream_step(params, state: dict, chunk: jnp.ndarray, cfg,
+                fcfg: features.FrontendConfig) -> tuple[dict, jnp.ndarray]:
+    """Advance every stream by ``chunk`` [B, k*hop_len] samples.
+
+    Returns ``(state, logits [B, n_classes])``.  Logits are valid once
+    :func:`warm` is True for the lane (a full receptive field of real
+    frames); before that the window still contains init zeros.
+    """
+    fe, frames = features.frontend_push(state["frontend"], chunk, fcfg)
+    new = {"frontend": fe}
+    if "feat" in state:
+        new["feat"] = ring.ring_push(state["feat"], frames)
+    emb = ring.ring_push(state["embed"],
+                         kwt.embed_frames(params, frames, cfg))
+    new["embed"] = emb
+    # barrier: the encoder must see only the assembled [B, T, d] window, not
+    # the hop-sized producers — otherwise XLA fuses frontend/ring ops into
+    # the encoder and its rounding becomes a function of the chunk size k,
+    # breaking bit-identity with the offline jit(kwt.forward) program.
+    # shard_activations pins the packed multi-stream batch to the DP axes
+    # under launch/stream_serve.py's mesh (exact no-op off-mesh).
+    window = jax.lax.optimization_barrier(
+        ctx.shard_activations(ring.ring_window(emb)))
+    logits = kwt.encode_window(params, window, cfg)
+    return new, logits
+
+
+def warm(state: dict) -> jnp.ndarray:
+    """[B] bool: lane's window is fully populated with real frames."""
+    return ring.ring_warm(state["embed"])
+
+
+def window_mfcc(state: dict) -> jnp.ndarray:
+    """The current feature window as an offline batch [B, F, T] — feeding
+    this to ``models.kwt.forward`` reproduces ``stream_step``'s logits
+    bit-for-bit (the equivalence tests' oracle)."""
+    return jnp.swapaxes(ring.ring_window(state["feat"]), 1, 2)
+
+
+def reset_lane(state: dict, lane) -> dict:
+    """Zero one stream's history (server slot refill): frontend tail,
+    feature/embedding rings and warm-up count all restart for that lane."""
+    new = {"frontend": {"tail": state["frontend"]["tail"].at[lane].set(0.0)},
+           "embed": ring.ring_reset_lane(state["embed"], lane)}
+    if "feat" in state:
+        new["feat"] = ring.ring_reset_lane(state["feat"], lane)
+    return new
+
+
+def posteriors(logits: jnp.ndarray) -> jnp.ndarray:
+    """Per-hop class posteriors for the detector (f32 softmax on the f32
+    logits both quantised and float paths emit)."""
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)

@@ -1,0 +1,74 @@
+"""Externalized ring-buffer state pytrees for streaming inference.
+
+The kws_streaming external-state idiom, functionally: state is a plain
+pytree of arrays — ``{"buf", "pos", "count"}`` — and every operation is a
+pure function ``(state, frames) -> state`` / ``state -> window``, so a
+serving slot's streaming state lives in checkpoints, donated jit buffers
+and sharded device memory exactly like model params, never in Python
+objects.
+
+Layout: ``buf`` is ``[B, length, ...]`` with a *shared* scalar write
+cursor ``pos`` (all lanes of a batched server advance hop-synchronously)
+and a *per-lane* ``count`` [B] so freshly refilled slots can warm up
+mid-stream (see ``launch/stream_serve.py``).  ``window`` reads the last
+``length`` entries out in chronological order, oldest first.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ring_init(batch: int, length: int, feat_shape: tuple,
+              dtype=jnp.float32) -> dict:
+    """Zeroed ring holding ``length`` feature vectors per lane."""
+    return {"buf": jnp.zeros((batch, length) + tuple(feat_shape), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+            "count": jnp.zeros((batch,), jnp.int32)}
+
+
+def ring_len(state: dict) -> int:
+    return state["buf"].shape[1]
+
+
+def ring_push(state: dict, frames: jnp.ndarray) -> dict:
+    """Write ``frames`` [B, k, ...] at pos..pos+k-1 (mod length), advance.
+
+    k is a static shape; pos is traced — the scatter wraps around the end
+    of the buffer without data movement (true ring, not a shift buffer).
+    """
+    length = ring_len(state)
+    k = frames.shape[1]
+    assert k <= length, \
+        f"push of {k} frames overruns the {length}-frame ring: the modulo " \
+        "scatter would write duplicate indices (unspecified winner)"
+    idx = (state["pos"] + jnp.arange(k)) % length
+    return {"buf": state["buf"].at[:, idx].set(frames.astype(state["buf"].dtype)),
+            "pos": (state["pos"] + k) % length,
+            "count": jnp.minimum(state["count"] + k, length)}
+
+
+def ring_window(state: dict) -> jnp.ndarray:
+    """Chronological read-out [B, length, ...], oldest entry first.
+
+    After a push, ``pos`` points at the oldest live entry (the next to be
+    overwritten), so the window is the gather ``(pos + arange(L)) % L``.
+    Lanes with ``count < length`` still contain init zeros in their oldest
+    slots — gate on :func:`ring_warm` before trusting the window.
+    """
+    length = ring_len(state)
+    idx = (state["pos"] + jnp.arange(length)) % length
+    return jnp.take(state["buf"], idx, axis=1)
+
+
+def ring_warm(state: dict) -> jnp.ndarray:
+    """[B] bool: lane has seen a full window of real frames."""
+    return state["count"] >= ring_len(state)
+
+
+def ring_reset_lane(state: dict, lane) -> dict:
+    """Zero one lane's history (slot refill in the batched server): the
+    shared cursor keeps advancing; the lane re-warms via its own count."""
+    return {"buf": state["buf"].at[lane].set(0),
+            "pos": state["pos"],
+            "count": state["count"].at[lane].set(0)}

@@ -1,0 +1,339 @@
+"""repro.stream: streaming-vs-offline bit-equivalence (float and LUT
+paths), frontend chunking invariance, ring-buffer wraparound / restart
+exactness, slot-refill warm-up, and detector hysteresis edge cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import pipeline
+from repro.launch.serve import quantize_params
+from repro.models import kwt
+from repro.stream import detector as det
+from repro.stream import engine
+from repro.stream import features
+from repro.stream import ring
+
+KEY = jax.random.PRNGKey(0)
+CFG = registry.get("kwt-tiny").config
+FCFG = features.FrontendConfig()
+HOP = FCFG.hop_len
+T = CFG.input_dim[1]
+
+
+def _audio(batch, hops, seed=1, scale=0.1):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed),
+                                     (batch, hops * HOP))
+
+
+def _run_stream(params, cfg, audio, chunk_hops=1):
+    """Feed the whole stream through jitted stream_step; final state+logits."""
+    state = engine.init_stream_state(cfg, FCFG, audio.shape[0])
+    step = jax.jit(lambda p, s, c: engine.stream_step(p, s, c, cfg, FCFG))
+    k = chunk_hops * HOP
+    logits = None
+    for i in range(0, audio.shape[1], k):
+        state, logits = step(params, state, audio[:, i:i + k])
+    return state, logits
+
+
+# ---------------------------------------------------------------------------
+# frontend
+# ---------------------------------------------------------------------------
+
+def test_dct_matrix_orthonormal():
+    d = features.dct_matrix(FCFG.n_mels, FCFG.n_mels)
+    np.testing.assert_allclose(np.asarray(d.T @ d), np.eye(FCFG.n_mels),
+                               atol=1e-5)
+
+
+def test_mel_filterbank_covers_band():
+    fb = features.mel_filterbank(FCFG)
+    assert fb.shape == (FCFG.n_fft // 2 + 1, FCFG.n_mels)
+    # every filter has mass, and interior bins are covered by some filter
+    assert (fb.sum(axis=0) > 0).all()
+
+
+@pytest.mark.parametrize("chunk_hops", [1, 5])
+def test_frontend_streaming_matches_offline_bitwise(chunk_hops):
+    hops = 20
+    audio = _audio(2, hops, seed=3)
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(audio)
+    state = features.frontend_init(FCFG, 2)
+    push = jax.jit(lambda s, c: features.frontend_push(s, c, FCFG))
+    outs = []
+    for i in range(0, hops, chunk_hops):
+        state, fr = push(state, audio[:, i * HOP:(i + chunk_hops) * HOP])
+        outs.append(fr)
+    stream = jnp.swapaxes(jnp.concatenate(outs, 1), 1, 2)
+    assert bool(jnp.array_equal(stream, off))
+
+
+def test_frontend_chunking_invariance_bitwise():
+    hops = 12
+    audio = _audio(1, hops, seed=4)
+    frames = {}
+    for k in (2, 4):
+        state = features.frontend_init(FCFG, 1)
+        push = jax.jit(lambda s, c: features.frontend_push(s, c, FCFG))
+        out = []
+        for i in range(0, hops, k):
+            state, fr = push(state, audio[:, i * HOP:(i + k) * HOP])
+            out.append(fr)
+        frames[k] = jnp.concatenate(out, 1)
+    assert bool(jnp.array_equal(frames[2], frames[4]))
+
+
+# ---------------------------------------------------------------------------
+# engine: streaming output bit-identical to offline kwt.forward
+# ---------------------------------------------------------------------------
+
+def _mode_setup(mode):
+    params = kwt.init_params(CFG, KEY)
+    if mode == "float":
+        return params, CFG
+    cfg = CFG.with_(softmax_mode=mode if mode != "lut_gelu" else "lut",
+                    act_approx="lut")
+    return quantize_params(params, CFG), cfg
+
+
+@pytest.mark.parametrize("mode,chunk_hops", [
+    ("float", 1), ("float", 3), ("lut", 1),
+    ("lut_fixed", 1), ("lut_fixed", 3)])
+def test_stream_bit_identical_to_offline(mode, chunk_hops):
+    """The acceptance criterion: streaming logits == offline
+    jax.jit(kwt.forward) on the same audio window, bit for bit, in the
+    float and quantised LUT paths, at any hop chunking."""
+    hops = T + 7 - (T + 7) % chunk_hops           # whole chunks, > window
+    params, cfg = _mode_setup(mode)
+    audio = _audio(2, hops, seed=5)
+    state, logits = _run_stream(params, cfg, audio, chunk_hops)
+    assert bool(engine.warm(state).all())
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(audio)[..., hops - T:]
+    ref = jax.jit(lambda p, w: kwt.forward(p, w, cfg))(params, off)
+    assert bool(jnp.array_equal(logits, ref)), \
+        f"streaming != offline in mode={mode} (max diff " \
+        f"{float(jnp.max(jnp.abs(logits - ref)))})"
+
+
+def test_stream_window_matches_offline_features():
+    hops = T + 5
+    params, cfg = _mode_setup("float")
+    audio = _audio(2, hops, seed=6)
+    state, _ = _run_stream(params, cfg, audio)
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(audio)[..., hops - T:]
+    assert bool(jnp.array_equal(engine.window_mfcc(state), off))
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_ring_wraparound_keeps_last_window():
+    length, feat = 5, (3,)
+    frames = jax.random.normal(KEY, (2, 17, 3))
+    st = ring.ring_init(2, length, feat)
+    for i in range(0, 15, 3):                     # k=3 pushes, wraps 3x
+        st = ring.ring_push(st, frames[:, i:i + 3])
+    assert bool(jnp.array_equal(ring.ring_window(st), frames[:, 10:15]))
+    st = ring.ring_push(st, frames[:, 15:17])     # partial wrap (k=2)
+    assert bool(jnp.array_equal(ring.ring_window(st), frames[:, 12:17]))
+    assert int(st["pos"]) == 17 % length
+    assert bool(ring.ring_warm(st).all())
+
+
+def test_ring_warmup_gating():
+    st = ring.ring_init(2, 4, ())
+    assert not bool(ring.ring_warm(st).any())
+    for i in range(3):
+        st = ring.ring_push(st, jnp.ones((2, 1)))
+        assert not bool(ring.ring_warm(st).any())
+    st = ring.ring_push(st, jnp.ones((2, 1)))
+    assert bool(ring.ring_warm(st).all())
+
+
+def test_stream_state_restart_exactness():
+    """Round-tripping the state pytree through host numpy (the checkpoint
+    path) resumes the stream bit-exactly — state lives entirely in the
+    pytree, not in Python objects."""
+    params, cfg = _mode_setup("float")
+    audio = _audio(1, 2 * T, seed=7)
+    half = T * HOP
+    state, _ = _run_stream(params, cfg, audio[:, :half])
+    # "checkpoint": device -> host numpy -> fresh device arrays
+    saved = jax.tree.map(np.asarray, jax.device_get(state))
+    restored = jax.tree.map(jnp.asarray, saved)
+    step = jax.jit(lambda p, s, c: engine.stream_step(p, s, c, cfg, FCFG))
+    out_a, out_b = [], []
+    sa, sb = state, restored
+    for i in range(half, 2 * half, HOP):
+        sa, la = step(params, sa, audio[:, i:i + HOP])
+        sb, lb = step(params, sb, audio[:, i:i + HOP])
+        out_a.append(la)
+        out_b.append(lb)
+    assert bool(jnp.array_equal(jnp.stack(out_a), jnp.stack(out_b)))
+
+
+def test_reset_lane_rewarms_and_matches_fresh_stream():
+    """Server slot refill: resetting one lane restarts its warm-up and its
+    post-warm logits equal a stream that never shared the batch."""
+    params, cfg = _mode_setup("float")
+    a01 = _audio(2, T + 3, seed=8)                # both lanes run a while
+    state, _ = _run_stream(params, cfg, a01)
+    state = engine.reset_lane(state, 0)
+    assert not bool(engine.warm(state)[0])
+    assert bool(engine.warm(state)[1])
+    # refill lane 0 with new audio; lane 1 keeps streaming different audio
+    fresh = _audio(2, T, seed=9)
+    cont = jnp.concatenate([fresh[:1], _audio(1, T, seed=10)], axis=0)
+    step = jax.jit(lambda p, s, c: engine.stream_step(p, s, c, cfg, FCFG))
+    logits = None
+    for i in range(0, T * HOP, HOP):
+        state, logits = step(params, state, cont[:, i:i + HOP])
+    assert bool(engine.warm(state).all())
+    # oracle: both lanes' windows through the offline forward, same batch
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(cont)
+    ref = jax.jit(lambda p, w: kwt.forward(p, w, cfg))(params, off)
+    assert bool(jnp.array_equal(logits[0], ref[0]))
+
+
+# ---------------------------------------------------------------------------
+# detector hysteresis / refractory
+# ---------------------------------------------------------------------------
+
+DCFG = det.DetectorConfig(keyword_class=1, smooth_hops=1,
+                          on_threshold=0.75, off_threshold=0.5,
+                          refractory_hops=4)
+
+
+def _drive(seq, dcfg=DCFG, warm=True):
+    """Feed a scalar keyword-posterior sequence; return fire pattern."""
+    st = det.detector_init(dcfg, 1)
+    fires = []
+    for p in seq:
+        probs = jnp.asarray([[1.0 - p, p]], jnp.float32)
+        st, ev = det.detector_step(st, probs, dcfg,
+                                   warm=jnp.asarray([warm]))
+        fires.append(bool(ev["fired"][0]))
+    return fires
+
+
+def test_detector_fires_once_per_excursion():
+    fires = _drive([0.1, 0.9, 0.9, 0.9, 0.9, 0.1])
+    assert fires == [False, True, False, False, False, False]
+
+
+def test_detector_no_refire_without_release():
+    # dips to between off(0.5) and on(0.75): hysteresis holds the latch
+    fires = _drive([0.9, 0.6, 0.6, 0.9, 0.9])
+    assert fires == [True, False, False, False, False]
+
+
+def test_detector_refractory_blocks_fast_refire():
+    # released (below off) but still inside the 4-hop refractory window
+    fires = _drive([0.9, 0.1, 0.9, 0.9, 0.9, 0.9])
+    assert fires[0] is True
+    assert fires[1:4] == [False, False, False]    # cooldown 4 hops
+    assert fires[4] is True                       # expires -> re-fires
+    assert fires[5] is False
+
+
+def test_detector_release_then_refire_after_refractory():
+    fires = _drive([0.9, 0.1, 0.1, 0.1, 0.1, 0.9, 0.1, 0.9])
+    assert fires == [True, False, False, False, False, True, False, False]
+
+
+def test_detector_warm_gating():
+    fires = _drive([0.9, 0.9], warm=False)
+    assert fires == [False, False]
+
+
+def test_detector_smoothing_suppresses_single_hop_spike():
+    dcfg = det.DetectorConfig(smooth_hops=4, on_threshold=0.75,
+                              off_threshold=0.5, refractory_hops=2)
+    fires = _drive([0.1, 0.95, 0.1, 0.1, 0.1], dcfg)
+    assert not any(fires)                         # 1-hop spike averaged away
+    fires = _drive([0.9] * 6, dcfg)
+    assert sum(fires) == 1                        # sustained keyword fires
+
+
+def test_detector_reset_lane_rearms():
+    st = det.detector_init(DCFG, 2)
+    hot = jnp.asarray([[0.1, 0.9]] * 2, jnp.float32)
+    st, ev = det.detector_step(st, hot, DCFG)
+    assert bool(ev["fired"].all())
+    st = det.detector_reset_lane(st, 0)
+    st, ev = det.detector_step(st, hot, DCFG)
+    assert bool(ev["fired"][0])                   # lane 0 re-armed
+    assert not bool(ev["fired"][1])               # lane 1 still latched
+
+
+# ---------------------------------------------------------------------------
+# data: audio surrogates
+# ---------------------------------------------------------------------------
+
+def test_keyword_audio_batch_deterministic_and_labelled():
+    b1 = pipeline.keyword_audio_batch(0, 3, batch=4, n_samples=T * HOP)
+    b2 = pipeline.keyword_audio_batch(0, 3, batch=4, n_samples=T * HOP)
+    assert bool(jnp.array_equal(b1["audio"], b2["audio"]))
+    assert b1["audio"].shape == (4, T * HOP)
+    # keyword clips carry more energy than pure noise
+    e = jnp.mean(jnp.square(b1["audio"]), axis=1)
+    if bool((b1["labels"] == 1).any()) and bool((b1["labels"] == 0).any()):
+        assert float(jnp.min(jnp.where(b1["labels"] == 1, e, jnp.inf))) > \
+            float(jnp.max(jnp.where(b1["labels"] == 0, e, -jnp.inf)))
+
+
+def test_keyword_event_stream_ground_truth():
+    audio, events = pipeline.keyword_event_stream(0, 1, n_hops=200,
+                                                  hop_len=HOP)
+    assert audio.shape == (200 * HOP,)
+    assert events, "expected at least one keyword event in 2s"
+    for s, e in events:
+        assert 0 <= s < e <= 200
+
+
+# ---------------------------------------------------------------------------
+# review hardening: ring overrun, lean server state, warm-up contamination
+# ---------------------------------------------------------------------------
+
+def test_ring_push_wider_than_ring_rejected():
+    st = ring.ring_init(1, 4, ())
+    with pytest.raises(AssertionError, match="overruns"):
+        ring.ring_push(st, jnp.ones((1, 5)))
+
+
+def test_keep_features_false_still_bit_identical():
+    """The lean server state (no raw-MFCC ring) produces the same logits."""
+    hops = T + 4
+    params, cfg = _mode_setup("float")
+    audio = _audio(2, hops, seed=11)
+    state = engine.init_stream_state(cfg, FCFG, 2, keep_features=False)
+    assert "feat" not in state
+    step = jax.jit(lambda p, s, c: engine.stream_step(p, s, c, cfg, FCFG))
+    for i in range(0, hops * HOP, HOP):
+        state, logits = step(params, state, audio[:, i:i + HOP])
+    state = engine.reset_lane(state, 0)           # lean reset path works too
+    assert not bool(engine.warm(state)[0])
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(audio)[..., hops - T:]
+    ref = jax.jit(lambda p, w: kwt.forward(p, w, cfg))(params, off)
+    assert bool(jnp.array_equal(logits, ref))
+
+
+def test_detector_warmup_history_cannot_fire_at_warm_boundary():
+    """Posteriors collected while the lane was NOT warm (zero-padded
+    windows) must age out of the smoothing history before a fire: a lane
+    that scored keyword-like during warm-up may only fire after
+    smooth_hops consecutive warm hops."""
+    dcfg = det.DetectorConfig(smooth_hops=3, on_threshold=0.75,
+                              off_threshold=0.5, refractory_hops=2)
+    st = det.detector_init(dcfg, 1)
+    hot = jnp.asarray([[0.1, 0.9]], jnp.float32)
+    for _ in range(5):                            # padded window looks hot
+        st, ev = det.detector_step(st, hot, dcfg, warm=jnp.asarray([False]))
+        assert not bool(ev["fired"][0])
+    for i in range(3):                            # warm hops 1..3
+        st, ev = det.detector_step(st, hot, dcfg, warm=jnp.asarray([True]))
+        assert bool(ev["fired"][0]) == (i == 2)   # fires only at hop 3
