@@ -21,6 +21,7 @@ import argparse
 import dataclasses
 import json
 
+from repro import runtime
 from repro.configs import registry
 from repro.configs.base import QuantConfig
 
@@ -147,8 +148,8 @@ def main():
         show("it1_int8kv", it1, base)
         it2 = run_variant(
             "qwen2.5-14b", "decode_32k", "it2_int8kv_lut",
-            lambda c: c.with_(quant=QuantConfig(quantize_kv_cache=True),
-                              softmax_mode="lut", act_approx="lut"))
+            lambda c: runtime.get_backend("lut_float").configure(
+                c.with_(quant=QuantConfig(quantize_kv_cache=True))))
         show("it2_+lut(paper)", it2, base)
         it3 = run_variant(
             "qwen2.5-14b", "decode_32k", "it3_int8kv_tponly",

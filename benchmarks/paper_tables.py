@@ -156,23 +156,24 @@ def bench_inference_profile(trained=None):
     relative wall-time of the three numerical paths here; absolute CPU
     microseconds are NOT cycle-accurate claims.
     """
+    from repro import runtime
+
     cfg = registry.get("kwt-tiny").config
     params = trained or _train_kwt(cfg)
     x = pipeline.keyword_batch(0, 999, batch=64, input_dim=cfg.input_dim)
-    qparams = quant.dequantize_tree(quant.quantize_tree(params, weight_exponent=6))
+    recipe = runtime.QuantRecipe.from_config(cfg)
 
     variants = {
-        "float": (cfg, params),
-        "quantised": (cfg, qparams),
-        "quantised_lut": (cfg.with_(softmax_mode="lut_fixed",
-                                    act_approx="lut"), qparams),
+        "float": runtime.compile_model(cfg, params, backend="float"),
+        "quantised": runtime.compile_model(cfg, params, backend="float",
+                                           recipe=recipe),
+        "quantised_lut": runtime.compile_model(cfg, params, backend="lut"),
     }
     paper_cycles = {"float": 26e6, "quantised": 13e6, "quantised_lut": 5.5e6}
     out = {}
-    for name, (c, p) in variants.items():
-        fn = jax.jit(lambda mf, p=p, c=c: kwt.forward(p, mf, c))
-        t = _time(fn, x["mfcc"])
-        acc = _accuracy(c, p)
+    for name, eng in variants.items():
+        t = _time(eng.forward, x["mfcc"])
+        acc = _accuracy(eng.exec_cfg, eng.params)
         print(f"table9_{name},{t:.1f},acc={acc:.3f};paper_cycles="
               f"{paper_cycles[name]:.1e}")
         out[name] = {"us": t, "acc": acc}

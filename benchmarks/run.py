@@ -1,12 +1,18 @@
 """Benchmark harness: one function per paper table (benchmarks.paper_tables)
 plus kernel micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--quick]
+``--backend-sweep`` times one KWT-Tiny forward per runtime backend
+(float / lut_float / lut / pallas-interpret) through the same
+``runtime.compile_model`` Engine the launchers serve with, and emits
+``BENCH_runtime.json`` — the start of the per-backend latency trajectory.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--backend-sweep]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -41,11 +47,55 @@ def bench_kernels():
           "interpret_mode_single_call")
 
 
+def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
+                        batch: int = 64, reps: int = 20) -> dict:
+    """Per-backend forward latency of the Engine the launchers actually
+    serve (runtime.compile_model on KWT-Tiny), emitted as JSON."""
+    from repro import runtime
+    from repro.configs import registry
+    from repro.models import kwt
+
+    cfg = registry.get("kwt-tiny").config
+    params = kwt.init_params(cfg, jax.random.PRNGKey(0))
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1),
+                                (batch, *cfg.input_dim))
+    results = []
+    for name in runtime.available_backends():
+        eng = runtime.compile_model(cfg, params, backend=name)
+        jax.block_until_ready(eng.forward(x))        # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            outp = eng.forward(x)
+        jax.block_until_ready(outp)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        row = {"backend": name, "us_per_forward": round(us, 1),
+               "batch": batch, "interpret": eng.interpret,
+               "rom_bytes": eng.rom_bytes, "param_bytes": eng.param_bytes}
+        results.append(row)
+        print(f"backend_{name},{us:.1f},rom={eng.rom_bytes}B;"
+              f"params={eng.param_bytes}B;interpret={eng.interpret}")
+    report = {"arch": "kwt-tiny", "batch": batch, "reps": reps,
+              "device": jax.default_backend(), "results": results}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", file=sys.stderr)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the trained-model tables (fast CI mode)")
+    ap.add_argument("--backend-sweep", action="store_true",
+                    help="per-backend Engine forward latency -> "
+                         "BENCH_runtime.json (skips the paper tables)")
+    ap.add_argument("--out", default="BENCH_runtime.json")
     args = ap.parse_args()
+
+    if args.backend_sweep:
+        print("name,us_per_call,derived")
+        bench_backend_sweep(args.out)
+        return
 
     from benchmarks import paper_tables as pt
 

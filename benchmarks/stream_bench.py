@@ -22,8 +22,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs import registry
-from repro.launch.serve import quantize_params
 from repro.models import kwt
 from repro.stream import detector as det
 from repro.stream import engine
@@ -73,6 +73,9 @@ def main(argv=None):
     ap.add_argument("--streams", type=int, nargs="+", default=[1, 16, 64])
     ap.add_argument("--hops", type=int, default=50)
     ap.add_argument("--chunk-hops", type=int, default=1)
+    ap.add_argument("--backends", nargs="+", default=["float", "lut"],
+                    help="runtime backends to sweep (pallas interpret is "
+                         "slow on CPU; add it explicitly when wanted)")
     ap.add_argument("--out", default="BENCH_stream.json")
     args = ap.parse_args(argv)
 
@@ -81,11 +84,10 @@ def main(argv=None):
     dcfg = det.DetectorConfig()
     params = kwt.init_params(base, jax.random.PRNGKey(0))
 
-    modes = {
-        "float": (base, params),
-        "lut_fixed": (base.with_(softmax_mode="lut_fixed", act_approx="lut"),
-                      quantize_params(params, base)),
-    }
+    modes = {}
+    for b in args.backends:
+        eng = runtime.compile_model(base, params, backend=b)
+        modes[b] = (eng.exec_cfg, eng.params)
     results = []
     print("mode,streams,per_step_ms,rtf,aggregate_realtime_x")
     for mode, (cfg, p) in modes.items():

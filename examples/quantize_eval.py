@@ -15,8 +15,9 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs import registry
-from repro.core import calibrate, quant
+from repro.core import calibrate
 from repro.data import pipeline
 from repro.models import kwt
 from repro.models import transformer as T
@@ -69,9 +70,10 @@ def main():
     ref_loss = float(T.loss_fn(params, batch, cfg))
     print(f"{args.arch}: float loss {ref_loss:.4f}")
     for wexp in (3, 4, 5, 6, 7):
-        qp = quant.dequantize_tree(quant.quantize_tree(params, weight_exponent=wexp))
-        l = float(T.loss_fn(qp, batch, cfg.with_(softmax_mode='lut',
-                                                 act_approx='lut')))
+        eng = runtime.compile_model(
+            cfg, params, backend="lut_float",
+            recipe=runtime.QuantRecipe.from_config(cfg, weight_exponent=wexp))
+        l = float(T.loss_fn(eng.params, batch, eng.exec_cfg))
         print(f"  w=2^{wexp}: quantised+LUT loss {l:.4f} "
               f"(delta {l-ref_loss:+.4f})")
 

@@ -3,11 +3,14 @@
 1. Train KWT-Tiny (1646 params — Table IV) on the synthetic 2-class GSC
    surrogate ("dog"/"notdog", paper §III).
 2. Post-training power-of-2 quantisation at the Table V best exponents
-   (weights 2^6, inputs 2^5).
-3. The "+Hardware" path: Q8.24 LUT softmax + LUT GELU (paper §VI).
+   (weights 2^6, inputs 2^5) — ``runtime.QuantRecipe`` on the float backend.
+3. The "+Hardware" path: the selected ``--backend`` (default ``lut`` =
+   Q8.24 LUT softmax + LUT GELU; ``pallas`` = the same pipeline as Pallas
+   kernels) via ``runtime.compile_model``.
 Prints the Table IX accuracy staircase.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+          [--backend lut|pallas|lut_float|float] [--eval-n 512]
 """
 
 import argparse
@@ -18,17 +21,17 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs import registry
-from repro.core import quant
 from repro.data import pipeline
 from repro.models import kwt
 from repro.optim import adamw
 
 
-def accuracy(cfg, params, n=512):
+def accuracy(eng, n=512):
     correct = total = 0
-    for b in pipeline.gsc_eval_set(0, n=n, input_dim=cfg.input_dim):
-        pred = jnp.argmax(kwt.forward(params, b["mfcc"], cfg), -1)
+    for b in pipeline.gsc_eval_set(0, n=n, input_dim=eng.cfg.input_dim):
+        pred = jnp.argmax(eng.forward(b["mfcc"]), -1)
         correct += int(jnp.sum(pred == b["labels"]))
         total += int(b["labels"].size)
     return correct / total
@@ -37,6 +40,10 @@ def accuracy(cfg, params, n=512):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--backend", default="lut",
+                    choices=runtime.available_backends(),
+                    help="stage-3 execution backend")
+    ap.add_argument("--eval-n", type=int, default=512)
     args = ap.parse_args()
 
     cfg = registry.get("kwt-tiny").config
@@ -61,19 +68,23 @@ def main():
         if i % 50 == 0:
             print(f"step {i:4d}  loss {float(loss):.4f}")
 
-    acc = accuracy(cfg, params)
+    eng_f = runtime.compile_model(cfg, params, backend="float")
+    acc = accuracy(eng_f, args.eval_n)
     print(f"\n[1] float32 accuracy:            {acc:.3f}")
 
-    qtree = quant.quantize_tree(params, weight_exponent=6)
-    qbytes, fbytes = quant.tree_quantized_bytes(qtree)
-    qparams = quant.dequantize_tree(qtree)
-    acc_q = accuracy(cfg, qparams)
+    # stage 2: PTQ weights, still exact float ops (Table IX middle column)
+    eng_q = runtime.compile_model(cfg, params, backend="float",
+                                  recipe=runtime.QuantRecipe.from_config(cfg))
+    acc_q = accuracy(eng_q, args.eval_n)
+    qbytes, _ = eng_q.quantized_bytes
     print(f"[2] int8 PTQ (w=2^6, Table V):   {acc_q:.3f}  "
           f"({qbytes} int8 bytes — paper: 1.646 kB)")
 
-    hcfg = cfg.with_(softmax_mode="lut_fixed", act_approx="lut")
-    acc_h = accuracy(hcfg, qparams)
-    print(f"[3] +LUT hardware path (Q8.24):  {acc_h:.3f}  "
+    # stage 3: the accelerated path under the selected backend
+    eng_h = runtime.compile_model(cfg, params, backend=args.backend)
+    acc_h = accuracy(eng_h, args.eval_n)
+    print(f"[3] {eng_h.describe()}")
+    print(f"    accuracy:                    {acc_h:.3f}  "
           f"(paper Table IX: ~0.80 vs 0.872 float)")
 
 

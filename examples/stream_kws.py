@@ -4,11 +4,13 @@
    streaming MFCC frontend (repro.stream.features) -> KWT (paper §III,
    with audio standing in for the GSC recordings).
 2. Run the always-on path on a continuous stream: ring-buffer incremental
-   inference (repro.stream.engine) + posterior smoothing / hysteresis
-   triggering (repro.stream.detector).
+   inference (repro.stream.engine) under a ``runtime.compile_model``
+   engine (``--backend float|lut_float|lut|pallas``) + posterior
+   smoothing / hysteresis triggering (repro.stream.detector).
 3. Print detected keyword events vs the ground-truth event intervals.
 
 Run:  PYTHONPATH=src python examples/stream_kws.py [--train-steps 150]
+          [--backend lut]
 Exits non-zero if the detector misses every keyword (CI smoke contract).
 """
 
@@ -20,6 +22,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs import registry
 from repro.data import pipeline
 from repro.launch.stream_serve import train_params
@@ -34,18 +37,23 @@ def main():
     ap.add_argument("--stream-hops", type=int, default=400,
                     help="stream length (hops of 10ms)")
     ap.add_argument("--chunk-hops", type=int, default=2)
+    ap.add_argument("--backend", default="float",
+                    choices=runtime.available_backends())
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = registry.get("kwt-tiny").config
+    base_cfg = registry.get("kwt-tiny").config
     fcfg = features.FrontendConfig()
     dcfg = det.DetectorConfig()
-    t = engine.window_frames(cfg)
+    t = engine.window_frames(base_cfg)
     print(f"KWT-Tiny streaming: window {t} frames = "
           f"{fcfg.receptive_field(t)/fcfg.sample_rate*1e3:.0f}ms, "
           f"hop {fcfg.hop_len/fcfg.sample_rate*1e3:.0f}ms")
 
-    params = train_params(cfg, fcfg, args.train_steps, args.seed)
+    fparams = train_params(base_cfg, fcfg, args.train_steps, args.seed)
+    eng = runtime.compile_model(base_cfg, fparams, backend=args.backend)
+    print(eng.describe())
+    cfg, params = eng.exec_cfg, eng.params
 
     audio, truth = pipeline.keyword_event_stream(
         args.seed + 1, 0, n_hops=args.stream_hops, hop_len=fcfg.hop_len)

@@ -67,8 +67,13 @@ class ModelConfig:
     n_classes: int = 0
     # --- numerics / the paper's technique ---
     dtype: str = "bfloat16"
-    softmax_mode: str = "exact"   # applies to attention + router softmax
-    act_approx: str = "exact"
+    # softmax_mode / act_approx / kernel_interpret are pinned by
+    # repro.runtime backends at plan time (runtime.compile_model); no call
+    # site outside repro/runtime should mutate them directly.
+    softmax_mode: str = "exact"   # exact | lut | lut_fixed | pallas
+    act_approx: str = "exact"     # exact | lut | pallas
+    kernel_interpret: bool = True  # pallas modes: interpret vs Mosaic,
+    #                                decided ONCE at plan time, not per call
     quant: Optional[QuantConfig] = None
     # --- compile / distribution knobs ---
     remat: bool = True

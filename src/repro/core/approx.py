@@ -15,6 +15,10 @@ Dispatch contract used across the framework:
 "exact"      - standard float op (the paper's un-accelerated C path).
 "lut"        - float LUT gather (tables identical to the ROM contents).
 "lut_fixed"  - full Q8.24 integer pipeline (the "+Hardware" path, Table IX).
+"pallas"     - the same Q8.24 pipeline executed by the Pallas kernels in
+               ``repro.kernels`` (interpret vs Mosaic is the ``interpret``
+               argument, pinned once at plan time by ``repro.runtime`` via
+               ``cfg.kernel_interpret`` — never probed per call).
 """
 
 from __future__ import annotations
@@ -87,18 +91,23 @@ def softmax_lut(x: jnp.ndarray, axis: int = -1, *, fixed: bool = False,
     return fxp.to_float(out_q)
 
 
-def softmax(x: jnp.ndarray, axis: int = -1, mode: str = "exact", **kw) -> jnp.ndarray:
+def softmax(x: jnp.ndarray, axis: int = -1, mode: str = "exact",
+            interpret: bool = True, **kw) -> jnp.ndarray:
     if mode == "exact":
         return softmax_exact(x, axis)
     if mode == "lut":
         return softmax_lut(x, axis, fixed=False, **kw)
     if mode == "lut_fixed":
         return softmax_lut(x, axis, fixed=True, **kw)
+    if mode == "pallas":
+        assert axis in (-1, x.ndim - 1), "pallas softmax reduces the last axis"
+        from repro.kernels import ops
+        return ops.lut_softmax(x, fixed=True, interpret=interpret)
     raise ValueError(f"unknown softmax mode {mode!r}")
 
 
 def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
-                   mode: str = "exact") -> jnp.ndarray:
+                   mode: str = "exact", interpret: bool = True) -> jnp.ndarray:
     """Softmax over the last axis with *structural* masking.
 
     For the LUT modes, masked lanes are excluded from the numerator sum
@@ -123,6 +132,20 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
         sm = s if mask is None else jnp.where(mask, s, neg)
         out = jax.nn.softmax(sm, axis=-1)
         return out if mask is None else jnp.where(mask, out, 0.0)
+    if mode == "pallas":
+        # Kernel path: unmasked rows are the Pallas LUT pipeline verbatim
+        # (bit-identical to ops.lut_softmax).  With a mask, masked lanes
+        # enter the kernel at the z=10 clip bin (the paper's own off-range
+        # leak); we zero them and renormalise in f32, recovering the
+        # structural exclusion of the jnp reference up to that rescale.
+        from repro.kernels import ops
+        sm = s if mask is None else jnp.where(mask, s, neg)
+        out = ops.lut_softmax(sm, fixed=True, interpret=interpret)
+        if mask is not None:
+            out = jnp.where(mask, out, 0.0)
+            out = out / jnp.maximum(jnp.sum(out, axis=-1, keepdims=True),
+                                    1e-30)
+        return out
     bank = lutlib.make_lut_bank()
     sm = s if mask is None else jnp.where(mask, s, neg)
     m = jnp.max(sm, axis=-1, keepdims=True)
@@ -176,13 +199,17 @@ def gelu_lut(x: jnp.ndarray, *, interp: bool = False,
                      jnp.where(x < lutlib.GELU_LO, 0.0, mid))
 
 
-def gelu(x: jnp.ndarray, mode: str = "exact", **kw) -> jnp.ndarray:
+def gelu(x: jnp.ndarray, mode: str = "exact", interpret: bool = True,
+         **kw) -> jnp.ndarray:
     if mode == "exact":
         return gelu_exact(x)
     if mode == "lut":
         return gelu_lut(x, interp=False, **kw)
     if mode == "lut_interp":
         return gelu_lut(x, interp=True, **kw)
+    if mode == "pallas":
+        from repro.kernels import ops
+        return ops.lut_gelu(x, interpret=interpret)
     raise ValueError(f"unknown gelu mode {mode!r}")
 
 
@@ -230,12 +257,17 @@ def sqrelu(x: jnp.ndarray) -> jnp.ndarray:
     return r * r
 
 
-def activation(name: str, mode: str = "exact"):
-    """Resolve an activation by config name, honouring the approx mode."""
+def activation(name: str, mode: str = "exact", interpret: bool = True):
+    """Resolve an activation by config name, honouring the approx mode.
+    ``interpret`` only applies to the pallas kernel mode (pinned at plan
+    time by repro.runtime); SiLU-family pallas requests fall back to the
+    jnp LUT reference (the paper's kernel set covers GELU + softmax)."""
     if name == "gelu":
+        if mode == "pallas":
+            return lambda x: gelu(x, mode="pallas", interpret=interpret)
         return lambda x: gelu(x, mode="lut" if mode != "exact" else "exact")
     if name == "silu":
-        return lambda x: silu(x, mode=mode)
+        return lambda x: silu(x, mode="lut" if mode == "pallas" else mode)
     if name == "sqrelu":
         return lambda x: sqrelu(x)
     if name == "relu":

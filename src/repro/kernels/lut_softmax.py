@@ -29,6 +29,8 @@ from jax.experimental import pallas as pl
 from repro.core import fixedpoint as fxp
 from repro.core import lut as lutlib
 
+DEFAULT_BLOCK_M = 8
+
 
 def _reciprocal_q24_body(s_q, inv_tab):
     """reciprocal_q24 (lut.py) inlined for the kernel body (same math)."""
@@ -71,7 +73,8 @@ def _softmax_kernel_float(x_ref, exp_tab_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("fixed", "block_m", "interpret"))
-def lut_softmax_2d(x: jnp.ndarray, *, fixed: bool = True, block_m: int = 8,
+def lut_softmax_2d(x: jnp.ndarray, *, fixed: bool = True,
+                   block_m: int = DEFAULT_BLOCK_M,
                    interpret: bool = True) -> jnp.ndarray:
     """LUT softmax along the last axis of a [M, N] array."""
     m, n = x.shape

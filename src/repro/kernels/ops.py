@@ -1,12 +1,22 @@
 """Public jit'd wrappers for the Pallas kernels.
 
 Handles: arbitrary leading batch dims, padding to block multiples, dtype
-plumbing, and interpret-mode auto-detection (interpret=True on CPU — the
-validation mode mandated for this container; compiled Mosaic on real TPU).
+plumbing, and interpret-mode selection.  ``repro.runtime`` decides
+interpret-vs-Mosaic ONCE at plan time and passes the literal value down;
+the ``interpret=None`` auto-probe remains only for direct/ad-hoc callers
+(tests, notebooks) that bypass the runtime.
 
-The framework's model code calls these entry points; ``mode`` plumbing in
-``repro.models`` decides between exact XLA ops, jnp LUT reference, and these
-kernels.
+All block geometry goes through two shared helpers:
+
+  ``pad_to_block(x, axis, mult)``  - pad an axis up to a block multiple,
+                                     returning the original size for the
+                                     final slice-back;
+  ``fit_block(size, preferred)``   - shrink a preferred block edge by
+                                     powers of two until it divides the
+                                     (padded) size.
+
+which every wrapper below (GELU, softmax, matmul, attention) uses instead
+of the previously duplicated pad/shrink loops.
 """
 
 from __future__ import annotations
@@ -26,7 +36,9 @@ def _auto_interpret(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+def pad_to_block(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    """Pad ``axis`` up to a multiple of ``mult``; returns (padded, size0)
+    where ``size0`` is the pre-pad size (for slicing the result back)."""
     size = x.shape[axis]
     rem = (-size) % mult
     if rem == 0:
@@ -36,19 +48,41 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
     return jnp.pad(x, pads, constant_values=value), size
 
 
+def fit_block(size: int, preferred: int) -> int:
+    """Largest power-of-two shrink of ``preferred`` that divides ``size``.
+
+    Kernels require the grid to tile the (padded) array exactly; this
+    replaces the per-wrapper ``while size % b: b //= 2`` loops.  Always
+    >= 1 for positive sizes (1 divides everything).
+    """
+    assert size > 0 and preferred > 0, (size, preferred)
+    b = min(preferred, size)
+    while size % b:
+        b //= 2
+    return max(b, 1)
+
+
+# Softmax row-slab sizing: keep the live tile around 256k f32 elements
+# (1 MB in + 1 MB out of ~16 MB VMEM) while widening the slab for short
+# rows — at the paper's K=27 an 8-row slab would mean a grid step per
+# 8 rows; 256k/32 lets thousands of rows share one kernel invocation.
+_SM_TILE_ELEMS = 1 << 18
+
+
+def _softmax_block_m(m: int, n: int) -> int:
+    target = max(_sm.DEFAULT_BLOCK_M, min(1024, _SM_TILE_ELEMS // max(n, 1)))
+    return fit_block(m, target)
+
+
 def lut_gelu(x: jnp.ndarray, *, interp: bool = False,
              interpret: bool | None = None) -> jnp.ndarray:
     """Piecewise LUT GELU over any-shaped input."""
     shape = x.shape
     flat = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
-    padded, m0 = _pad_to(flat, 0, 8)
-    padded, n0 = _pad_to(padded, 1, 128)
-    bm = min(_gelu.DEFAULT_BLOCK_M, padded.shape[0])
-    bn = min(_gelu.DEFAULT_BLOCK_N, padded.shape[1])
-    while padded.shape[0] % bm:
-        bm //= 2
-    while padded.shape[1] % bn:
-        bn //= 2
+    padded, m0 = pad_to_block(flat, 0, 8)
+    padded, n0 = pad_to_block(padded, 1, 128)
+    bm = fit_block(padded.shape[0], _gelu.DEFAULT_BLOCK_M)
+    bn = fit_block(padded.shape[1], _gelu.DEFAULT_BLOCK_N)
     out = _gelu.lut_gelu_2d(padded, interp=interp, block_m=bm, block_n=bn,
                             interpret=_auto_interpret(interpret))
     return out[:m0, :n0].reshape(shape)
@@ -58,15 +92,15 @@ def lut_softmax(x: jnp.ndarray, *, fixed: bool = True,
                 interpret: bool | None = None) -> jnp.ndarray:
     """LUT softmax along the last axis of any-shaped input.
 
-    Padding lanes are filled with a very negative score: they land in the
-    z=10 clip bin and contribute e^{-10} each; we slice them away before
-    returning (their contribution to the sum is the same leak the paper's
-    own clip has for off-range scores).
+    Padding rows (axis 0) are whole extra rows and are sliced away before
+    returning — real rows never see padding lanes (the key axis is not
+    padded), so the wrapper is exact with respect to the 2-D kernel.
     """
     shape = x.shape
     flat = x.reshape(-1, shape[-1])
-    padded, m0 = _pad_to(flat, 0, 8)
-    out = _sm.lut_softmax_2d(padded, fixed=fixed,
+    padded, m0 = pad_to_block(flat, 0, 8)
+    bm = _softmax_block_m(padded.shape[0], padded.shape[1])
+    out = _sm.lut_softmax_2d(padded, fixed=fixed, block_m=bm,
                              interpret=_auto_interpret(interpret))
     return out[:m0].reshape(shape)
 
@@ -78,15 +112,13 @@ def int8_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray, *, x_exp: int,
     """Quantised matmul -> dequantised f32 (contract matches ref.int8_matmul)."""
     m, k = x_int.shape
     k2, n = w_int.shape
-    xp, _ = _pad_to(x_int, 0, 8)
-    xp, _ = _pad_to(xp, 1, 128)
-    wp, _ = _pad_to(w_int, 0, 128)
-    wp, _ = _pad_to(wp, 1, 128)
+    xp, _ = pad_to_block(x_int, 0, 8)
+    xp, _ = pad_to_block(xp, 1, 128)
+    wp, _ = pad_to_block(w_int, 0, 128)
+    wp, _ = pad_to_block(wp, 1, 128)
     acc_exp = x_exp + w_exp
     out_exp = acc_exp if out_exp is None else out_exp
-    bm = 128
-    while xp.shape[0] % bm:
-        bm //= 2
+    bm = fit_block(xp.shape[0], _mm.DEFAULT_BM)
     out = _mm.int8_matmul_raw(
         xp, wp, shift=acc_exp - out_exp, out_int16=(residual_bits == 16),
         block_m=bm, interpret=_auto_interpret(interpret))
@@ -99,12 +131,8 @@ def lut_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   interpret: bool | None = None) -> jnp.ndarray:
     """Flash attention with LUT-exp softmax; [B,H,L,D] GQA layout."""
     lq, lk = q.shape[2], k.shape[2]
-    block_q = _attn.DEFAULT_BQ
-    block_k = _attn.DEFAULT_BK
-    while lq % min(block_q, lq):
-        block_q //= 2
-    while lk % min(block_k, lk):
-        block_k //= 2
+    block_q = fit_block(lq, _attn.DEFAULT_BQ)
+    block_k = fit_block(lk, _attn.DEFAULT_BK)
     return _attn.lut_attention(
         q, k, v, causal=causal, use_lut=use_lut, scale=scale,
         block_q=block_q, block_k=block_k,

@@ -5,14 +5,15 @@ target gen len).  Finished slots are immediately refilled from the queue —
 the decode step always runs at full batch.  Prefill is chunked (hybrid
 ring caches are filled window-aligned, <= Q_CHUNK tokens per chunk).
 
-The paper's technique is a first-class serving flag: --quantize applies
-power-of-2 PTQ (Table V exponents) to the weights and switches softmax /
-activations to the LUT path, mirroring the KWT-Tiny-Q (+Hardware) pipeline
-at LM scale.
+Execution policy is one flag: ``--backend float|lut_float|lut|pallas``
+resolves through ``runtime.compile_model`` to an Engine that owns the
+paper's pipeline end to end (power-of-2 PTQ weights + LUT softmax/GELU
+for the quantising backends, Pallas kernels for ``pallas``), mirroring
+the KWT-Tiny-Q (+Hardware) staircase at LM scale.
 
 Usage (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
-      --requests 8 --max-len 64 [--quantize]
+      --requests 8 --max-len 64 [--backend lut]
 """
 
 from __future__ import annotations
@@ -24,21 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.configs import registry
-from repro.core import quant
 from repro.dist import ctx
 from repro.launch import mesh as meshlib
 from repro.launch import steps
-from repro.models import layers as L
-
-
-def quantize_params(params, cfg, rounding="nearest"):
-    """PTQ per paper §IV: int8 weights at 2^6, norms/biases stay float.
-    ``rounding="floor"`` reproduces the eq-9 cast bit-exactly."""
-    q = cfg.quant or __import__("repro.configs.base", fromlist=["QuantConfig"]).QuantConfig()
-    qtree = quant.quantize_tree(params, weight_exponent=q.weight_exponent,
-                                rounding=rounding)
-    return quant.dequantize_tree(qtree)
 
 
 def main(argv=None):
@@ -48,15 +39,21 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--backend", default="float",
+                    choices=runtime.available_backends(),
+                    help="execution backend (runtime.compile_model)")
     ap.add_argument("--quantize", action="store_true",
-                    help="paper technique: int8 PTQ weights + LUT softmax/act")
+                    help="deprecated alias for --backend lut_float "
+                         "(the pre-runtime --quantize numerics)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.quantize and args.backend != "float":
+        ap.error("--quantize is a deprecated alias for --backend lut_float; "
+                 "pass only --backend")
+    backend = "lut_float" if args.quantize else args.backend
 
     entry = registry.get(args.arch)
     cfg = entry.smoke if args.smoke else entry.config
-    if args.quantize:
-        cfg = cfg.with_(softmax_mode="lut", act_approx="lut")
     mesh = meshlib.make_host_mesh()
     mod = steps.model_module(cfg)
     assert cfg.family != "encdec", "use whisper_serve example for enc-dec"
@@ -70,12 +67,11 @@ def main(argv=None):
 
     with mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
         params = mod.init_params(cfg, jax.random.PRNGKey(args.seed))
-        if args.quantize:
-            params = quantize_params(params, cfg)
+        eng = runtime.compile_model(cfg, params, backend=backend)
+        print(eng.describe())
 
         B = args.slots
-        state = mod.init_decode_state(cfg, B, args.max_len)
-        decode = jax.jit(lambda p, t, s: mod.decode_step(p, t, cfg, s))
+        state = eng.init_decode_state(B, args.max_len)
 
         # per-slot bookkeeping (host side)
         active = [None] * B
@@ -83,16 +79,10 @@ def main(argv=None):
         done, t0, decoded = [], time.time(), 0
         cur = jnp.zeros((B,), jnp.int32)
 
-        def prefill_one(slot, req, state):
-            """Chunked prefill of one request into slot's cache lane."""
-            # (single-request prefill via batch-1 state then splice would
-            # need per-lane caches; for this driver we prefill at batch
-            # granularity: restart all lanes when the pool refills.)
-            return state
-
         while len(done) < args.requests:
             # refill empty slots -> batch prefill of their prompts together
-            refills = [i for i in range(B) if active[i] is None and queue]
+            # (at most len(queue): free slots can outnumber waiting requests)
+            refills = [i for i in range(B) if active[i] is None][:len(queue)]
             if refills:
                 # pad prompts to common length, run one batched prefill
                 reqs = [queue.pop(0) for _ in refills]
@@ -102,12 +92,10 @@ def main(argv=None):
                     toks[i, -len(r["prompt"]):] = r["prompt"]
                     active[i] = r
                     remaining[i] = r["gen"]
-                state = mod.init_decode_state(cfg, B, args.max_len)
-                logits, state = jax.jit(
-                    lambda p, t, s: mod.prefill(p, t, cfg, s))(
-                        params, jnp.asarray(toks), state)
+                state = eng.init_decode_state(B, args.max_len)
+                logits, state = eng.prefill(jnp.asarray(toks), state)
                 cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            logits, state = decode(params, cur, state)
+            logits, state = eng.decode_step(cur, state)
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
             decoded += int(sum(1 for i in range(B) if active[i]))
             for i in range(B):
@@ -120,7 +108,7 @@ def main(argv=None):
         dt = time.time() - t0
         print(f"served {args.requests} requests, {decoded} tokens decoded "
               f"in {dt:.2f}s -> {decoded/dt:.1f} tok/s "
-              f"(quantized={args.quantize})")
+              f"(backend={eng.backend_name})")
 
 
 if __name__ == "__main__":

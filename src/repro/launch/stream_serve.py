@@ -8,14 +8,16 @@ under ``dist.ctx`` sharding; finished streams free their lane, which is
 zeroed (``engine.reset_lane``) and immediately refilled from the queue —
 the step always runs at full batch.
 
-The paper's technique is the same first-class serving flag as offline:
-``--quantize`` applies the eq-9 PTQ weights and switches softmax/GELU to
-the LUT path; streaming logits stay bit-identical to offline inference
-either way (tests/test_stream.py).
+Execution policy is the same first-class serving flag as offline serve:
+``--backend float|lut_float|lut|pallas`` resolves through
+``runtime.compile_model`` to an Engine (eq-9 PTQ weights + LUT / Pallas
+softmax-GELU for the non-float backends); streaming logits stay
+bit-identical to that engine's offline forward either way
+(tests/test_stream.py, tests/test_runtime.py).
 
 Usage (CPU, reduced):
   PYTHONPATH=src python -m repro.launch.stream_serve --streams 8 --slots 4 \
-      --hops 120 [--quantize] [--train-steps 80]
+      --hops 120 [--backend lut] [--train-steps 80]
 """
 
 from __future__ import annotations
@@ -27,11 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.configs import registry
 from repro.data import pipeline
 from repro.dist import ctx
 from repro.launch import mesh as meshlib
-from repro.launch.serve import quantize_params
 from repro.models import kwt
 from repro.stream import detector as det
 from repro.stream import engine
@@ -75,25 +77,34 @@ def main(argv=None):
                     help="mean stream length in hops")
     ap.add_argument("--chunk-hops", type=int, default=1,
                     help="hops ingested per engine step")
+    ap.add_argument("--backend", default="float",
+                    choices=runtime.available_backends(),
+                    help="execution backend (runtime.compile_model)")
     ap.add_argument("--quantize", action="store_true",
-                    help="paper technique: int8 PTQ weights + LUT softmax/act")
+                    help="deprecated alias for --backend lut_float "
+                         "(the pre-runtime --quantize numerics)")
     ap.add_argument("--train-steps", type=int, default=80,
                     help="0 = serve a randomly initialised model")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.quantize and args.backend != "float":
+        ap.error("--quantize is a deprecated alias for --backend lut_float; "
+                 "pass only --backend")
+    backend = "lut_float" if args.quantize else args.backend
 
     entry = registry.get(args.arch)
-    cfg = entry.smoke
-    assert cfg.family == "kwt", "streaming serve drives the KWT family"
-    if args.quantize:
-        cfg = cfg.with_(softmax_mode="lut", act_approx="lut")
+    base_cfg = entry.smoke
+    assert base_cfg.family == "kwt", "streaming serve drives the KWT family"
     fcfg = features.FrontendConfig()
     dcfg = det.DetectorConfig()
     mesh = meshlib.make_host_mesh()
 
-    params = train_params(cfg, fcfg, args.train_steps, args.seed)
-    if args.quantize:
-        params = quantize_params(params, cfg)
+    # training always runs the float path; the engine then owns PTQ +
+    # mode selection for serving (the old --quantize flag plumbing).
+    fparams = train_params(base_cfg, fcfg, args.train_steps, args.seed)
+    eng = runtime.compile_model(base_cfg, fparams, backend=backend)
+    print(eng.describe())
+    cfg, params = eng.exec_cfg, eng.params
 
     B, k = args.slots, args.chunk_hops
     chunk_samples = k * fcfg.hop_len
@@ -156,7 +167,7 @@ def main(argv=None):
         print(f"served {args.streams} streams ({audio_s:.1f}s audio) in "
               f"{dt:.2f}s -> {audio_s/dt:.1f}x realtime aggregate; "
               f"{len(fired)} events fired / {truth} keywords present "
-              f"(quantized={args.quantize})")
+              f"(backend={eng.backend_name})")
     return fired
 
 

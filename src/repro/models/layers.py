@@ -165,18 +165,26 @@ def _sdpa_block(q, k, v, cfg, *, q0, k0, q_offset, kv_len_valid, causal):
     s = s * jnp.asarray(dh ** -0.5, acc_dt)
     qpos = jnp.asarray(q_offset) + q0 + jnp.arange(sq)   # [sq]
     kpos = k0 + jnp.arange(sk)                           # [sk]
-    mask = jnp.ones((sq, sk), bool)
+    # mask stays None when nothing masks (full bidirectional attention,
+    # e.g. KWT): the softmax paths then skip the select ops entirely and
+    # the pallas mode is the raw kernel output, bit-identical to
+    # kernels.ops.lut_softmax.
+    mask = None
     if causal:
-        mask = jnp.logical_and(mask, qpos[:, None] >= kpos[None, :])
+        mask = qpos[:, None] >= kpos[None, :]
     if cfg.sliding_window and causal:
         # ring-buffer (causal=False) paths enforce the window by overwrite;
         # position-based banding only applies to contiguous layouts.
         mask = jnp.logical_and(
             mask, kpos[None, :] > qpos[:, None] - cfg.sliding_window)
     if kv_len_valid is not None:
-        mask = jnp.logical_and(mask, (kpos < jnp.asarray(kv_len_valid))[None, :])
-    mask = mask[None, None, None]                   # broadcast over b, kv, g
-    p = approx.masked_softmax(s, mask, mode=cfg.softmax_mode)
+        valid = jnp.broadcast_to((kpos < jnp.asarray(kv_len_valid))[None, :],
+                                 (sq, sk))
+        mask = valid if mask is None else jnp.logical_and(mask, valid)
+    if mask is not None:
+        mask = mask[None, None, None]               # broadcast over b, kv, g
+    p = approx.masked_softmax(s, mask, mode=cfg.softmax_mode,
+                              interpret=cfg.kernel_interpret)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, sq, h, dh).astype(q.dtype)
@@ -362,7 +370,8 @@ def mlp_specs(cfg):
 
 
 def apply_mlp(p, x, cfg):
-    act = approx.activation(cfg.activation, cfg.act_approx)
+    act = approx.activation(cfg.activation, cfg.act_approx,
+                            interpret=cfg.kernel_interpret)
     if cfg.gated_mlp:
         gate = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
         up = jnp.einsum("bsd,df->bsf", x, p["w_up"])

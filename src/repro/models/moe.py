@@ -74,14 +74,16 @@ def _capacity(T: int, cfg) -> int:
 
 def _route(xt, router, cfg):
     logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
-    probs = approx.softmax(logits, axis=-1, mode=cfg.softmax_mode)
+    probs = approx.softmax(logits, axis=-1, mode=cfg.softmax_mode,
+                           interpret=cfg.kernel_interpret)
     gates, idx = jax.lax.top_k(probs, cfg.top_k)          # [T,k]
     gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
     return gates, idx
 
 
 def _expert_ffn(buf, wg, wu, wd, cfg):
-    act = approx.activation(cfg.activation, cfg.act_approx)
+    act = approx.activation(cfg.activation, cfg.act_approx,
+                            interpret=cfg.kernel_interpret)
     g = act(jnp.einsum("ecd,edf->ecf", buf, wg))
     u = jnp.einsum("ecd,edf->ecf", buf, wu)
     return jnp.einsum("ecf,efd->ecd", (g * u).astype(buf.dtype), wd)

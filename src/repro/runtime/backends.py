@@ -1,0 +1,97 @@
+"""Backend registry: *which* numeric/kernel realisation runs the model.
+
+The paper's pipeline has three executable readings of the same math —
+exact float ops, the jnp LUT reference (the ROM contents as gathers), and
+the Pallas kernels — and deployment work (sub-8-bit streaming KWS,
+arXiv:2207.06920; edge-transformer surveys) treats that choice as a
+first-class decision.  A ``Backend`` bundles the decision: the
+softmax/activation modes it pins on the config, whether params get the
+eq-9 PTQ by default, and — for the kernel path — whether Pallas runs in
+interpret mode or compiled Mosaic, decided ONCE here at plan time (the
+old per-call ``jax.default_backend()`` probe in ``kernels.ops`` is no
+longer consulted on the runtime path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def plan_interpret() -> bool:
+    """The one plan-time interpret/compiled decision: interpret everywhere
+    except a real TPU (the validation mode mandated for this container)."""
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One execution policy.
+
+    ``quantize``: apply the QuantRecipe PTQ to params by default.
+    ``uses_lut``: the 2.69 kB ROM bank is live (Engine.rom_bytes > 0).
+    ``uses_kernels``: softmax/GELU execute as Pallas kernels; the config
+    gets ``kernel_interpret`` pinned to the plan-time decision.
+    """
+
+    name: str
+    description: str
+    softmax_mode: str
+    act_approx: str
+    quantize: bool = False
+    uses_lut: bool = False
+    uses_kernels: bool = False
+
+    def configure(self, cfg, *, interpret: bool | None = None):
+        """Pin this backend's execution modes onto a ModelConfig.  The ONLY
+        place in the tree that mutates softmax_mode / act_approx."""
+        kw = dict(softmax_mode=self.softmax_mode, act_approx=self.act_approx)
+        if self.uses_kernels:
+            kw["kernel_interpret"] = (plan_interpret() if interpret is None
+                                      else bool(interpret))
+        return cfg.with_(**kw)
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register (or override) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name) -> Backend:
+    if isinstance(name, Backend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; available: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend(Backend(
+    "float", "exact XLA float ops, float params (paper's baseline)",
+    softmax_mode="exact", act_approx="exact"))
+
+register_backend(Backend(
+    "lut_float", "jnp LUT softmax with float carry + LUT GELU, PTQ params "
+                 "(Table IX column 3: quantised but unaccelerated)",
+    softmax_mode="lut", act_approx="lut", quantize=True, uses_lut=True))
+
+register_backend(Backend(
+    "lut", "jnp Q8.24 LUT reference: fixed-point softmax + LUT GELU, PTQ "
+           "params (the '+Hardware' path, Table IX column 4)",
+    softmax_mode="lut_fixed", act_approx="lut", quantize=True, uses_lut=True))
+
+register_backend(Backend(
+    "pallas", "Pallas kernels for softmax/GELU (interpret on CPU, compiled "
+              "Mosaic on TPU — decided at plan time), PTQ params",
+    softmax_mode="pallas", act_approx="pallas", quantize=True, uses_lut=True,
+    uses_kernels=True))

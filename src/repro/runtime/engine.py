@@ -1,0 +1,198 @@
+"""Engine: one compiled execution plan for one model + backend + recipe.
+
+``compile_model(cfg, params, backend=..., recipe=...)`` is the single
+entry point through which every launcher, example and benchmark selects
+execution.  It resolves the backend (float / lut_float / lut / pallas),
+applies the QuantRecipe PTQ when the backend calls for it, pins the
+execution modes onto the config ONCE (including the Pallas
+interpret-vs-Mosaic decision), and returns an ``Engine`` whose jitted
+entry points all run that one plan:
+
+    eng = runtime.compile_model(cfg, params, backend="lut")
+    logits = eng.forward(mfcc)            # offline [B, F, T] -> [B, C]
+    emb    = eng.embed_frames(frames)     # streaming building blocks
+    logits = eng.encode_window(window)    #   (consumed by stream.engine)
+    state, logits = eng.stream_step(state, chunk, fcfg)
+
+LM families additionally expose ``init_decode_state`` / ``prefill`` /
+``decode_step`` so ``launch/serve.py`` runs off the same object.
+
+Contract (tests/test_runtime.py): for any backend, streaming logits are
+bit-identical to that same engine's offline ``forward`` on the matching
+audio window — the PR-2 float/LUT bit-identity guarantee restated at the
+Engine level — and float/lut/pallas logits agree within the documented
+PTQ + LUT-bin tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro.core import lut as lutlib
+from repro.core import quant
+from repro.runtime.backends import Backend, get_backend
+from repro.runtime.recipe import QuantRecipe
+
+Pytree = Any
+
+
+def _model_module(cfg):
+    if cfg.family == "kwt":
+        from repro.models import kwt
+        return kwt
+    from repro.launch import steps
+    return steps.model_module(cfg)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+@dataclasses.dataclass
+class Engine:
+    """A planned model: prepared params + pinned execution config.
+
+    ``exec_cfg`` is the ONLY config that carries softmax_mode /
+    act_approx / kernel_interpret different from the user's ``cfg`` —
+    drivers that build their own fused jits (e.g. the streaming server's
+    joint engine+detector hop) close over ``eng.exec_cfg`` and pass
+    ``eng.params``, so execution policy still has a single source.
+    """
+
+    cfg: Any                        # the config compile_model was given
+    exec_cfg: Any                   # cfg with the backend's modes pinned
+    params: Pytree                  # PTQ-applied when the backend quantizes
+    backend: Backend
+    recipe: Optional[QuantRecipe]
+    quantized_bytes: Optional[tuple] = None   # (int bytes, float bytes)
+
+    def __post_init__(self):
+        self._mod = _model_module(self.exec_cfg)
+        cfg = self.exec_cfg
+        self._forward = jax.jit(lambda p, x: self._mod.forward(p, x, cfg))
+        self._embed = self._encode = self._prefill = self._decode = None
+        self._stream_steps = {}
+        if cfg.family == "kwt":
+            self._embed = jax.jit(
+                lambda p, fr: self._mod.embed_frames(p, fr, cfg))
+            self._encode = jax.jit(
+                lambda p, w: self._mod.encode_window(p, w, cfg))
+
+    # -- inference entry points (all jitted, params passed as operands) ----
+
+    def forward(self, x):
+        """Offline forward: kwt mfcc [B,F,T] -> logits; LM tokens -> logits."""
+        return self._forward(self.params, x)
+
+    def embed_frames(self, frames):
+        """[B, t, F] time-major frames -> [B, t, d] patch embeddings."""
+        self._require_kwt("embed_frames")
+        return self._embed(self.params, frames)
+
+    def encode_window(self, window):
+        """Assembled [B, T, d] window -> logits [B, n_classes]."""
+        self._require_kwt("encode_window")
+        return self._encode(self.params, window)
+
+    def stream_step(self, state, chunk, fcfg):
+        """One hop of incremental inference (stream.engine.stream_step under
+        this engine's plan): (state, chunk [B, k*hop]) -> (state, logits)."""
+        self._require_kwt("stream_step")
+        step = self._stream_steps.get(fcfg)
+        if step is None:
+            from repro.stream import engine as stream_engine
+            cfg = self.exec_cfg
+            step = jax.jit(lambda p, s, c: stream_engine.stream_step(
+                p, s, c, cfg, fcfg))
+            self._stream_steps[fcfg] = step
+        return step(self.params, state, chunk)
+
+    # -- LM serving entry points ------------------------------------------
+
+    def init_decode_state(self, batch: int, max_len: int):
+        return self._mod.init_decode_state(self.exec_cfg, batch, max_len)
+
+    def prefill(self, tokens, state):
+        if self._prefill is None:
+            cfg = self.exec_cfg
+            self._prefill = jax.jit(
+                lambda p, t, s: self._mod.prefill(p, t, cfg, s))
+        return self._prefill(self.params, tokens, state)
+
+    def decode_step(self, token, state):
+        if self._decode is None:
+            cfg = self.exec_cfg
+            self._decode = jax.jit(
+                lambda p, t, s: self._mod.decode_step(p, t, cfg, s))
+        return self._decode(self.params, token, state)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        """The plan-time Pallas decision (None: backend uses no kernels)."""
+        return self.exec_cfg.kernel_interpret if self.backend.uses_kernels \
+            else None
+
+    @property
+    def rom_bytes(self) -> int:
+        """LUT ROM footprint of the plan (paper: 2.69 kB; 0 for float)."""
+        return lutlib.make_lut_bank().rom_bytes if self.backend.uses_lut else 0
+
+    @property
+    def param_bytes(self) -> int:
+        """Deployed parameter bytes: int8 + residual-float when quantised,
+        plain float tree bytes otherwise."""
+        if self.quantized_bytes is not None:
+            return sum(self.quantized_bytes)
+        return _tree_bytes(self.params)
+
+    def describe(self) -> str:
+        q = "" if self.recipe is None else \
+            f", w=2^{self.recipe.weight_exponent}" \
+            f"/x=2^{self.recipe.input_exponent} {self.recipe.rounding}"
+        interp = "" if self.interpret is None else \
+            f", pallas={'interpret' if self.interpret else 'mosaic'}"
+        return (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
+                f"params {self.param_bytes} B, rom {self.rom_bytes} B{q}"
+                f"{interp}")
+
+    def _require_kwt(self, what: str):
+        if self.exec_cfg.family != "kwt":
+            raise NotImplementedError(
+                f"{what} is a KWT streaming entry point; family="
+                f"{self.exec_cfg.family!r} engines expose forward/prefill/"
+                f"decode_step")
+
+
+def compile_model(cfg, params, backend="float",
+                  recipe: QuantRecipe | None = None,
+                  interpret: bool | None = None) -> Engine:
+    """Plan execution of ``params`` under ``backend``.
+
+    ``recipe=None`` -> the backend's default policy: quantising backends
+    (lut_float / lut / pallas) derive a QuantRecipe from ``cfg.quant``;
+    the float backend leaves params untouched.  Passing an explicit
+    recipe forces PTQ on any backend (e.g. float ops on quantised weights
+    — Table IX's middle column).  ``interpret`` overrides the plan-time
+    Pallas interpret/Mosaic auto-decision (tests only).
+    """
+    be = get_backend(backend)
+    if recipe is None and be.quantize:
+        recipe = QuantRecipe.from_config(cfg)
+    qbytes = None
+    if recipe is not None:
+        qtree = recipe.quantize(params)
+        qbytes = quant.tree_quantized_bytes(qtree)
+        params = quant.dequantize_tree(qtree)
+    exec_cfg = be.configure(cfg, interpret=interpret)
+    return Engine(cfg=cfg, exec_cfg=exec_cfg, params=params, backend=be,
+                  recipe=recipe, quantized_bytes=qbytes)

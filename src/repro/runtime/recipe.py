@@ -1,0 +1,110 @@
+"""QuantRecipe: the paper's PTQ pipeline (§IV, eq 9, Table V) as one value.
+
+A recipe is everything ``runtime.compile_model`` needs to turn float
+parameters into the deployed numeric form: weight/input exponents, the
+rounding rule for the eq-9 cast, optional per-channel exponent refinement,
+and the residual (intermediate) width.  It subsumes the old
+``launch.serve.quantize_params`` helper — launchers no longer hand-roll
+``quantize_tree`` + ``dequantize_tree`` call pairs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """One deployment's quantisation policy (paper §IV + Table V).
+
+    ``weight_exponent``/``input_exponent`` are the Table V power-of-2
+    scales (best row: weights 2^6, inputs 2^5).  ``rounding`` selects the
+    eq-9 cast: ``"nearest"`` adds the half-LSB offset (default — floor's
+    correlated bias measurably shifts whole-model logits), ``"floor"``
+    reproduces the paper's cast bit-exactly.  ``per_channel`` refines each
+    output channel to its own no-saturation power-of-2 exponent
+    (beyond-paper; stored as ``QTensor.axis_exponents``, shifts only).
+    ``residual_bits=16`` is the paper's INT16 intermediate clip, consumed
+    by the int8 matmul path (``kernels.ops.int8_matmul``).
+    """
+
+    weight_exponent: int = 6
+    input_exponent: int = 5
+    bits: int = 8
+    residual_bits: int = 16
+    rounding: str = "nearest"
+    per_channel: bool = False
+    skip_norm_scales: bool = True      # norms/biases stay float (paper §IV)
+
+    @classmethod
+    def from_config(cls, cfg, **overrides) -> "QuantRecipe":
+        """Build from ``cfg.quant`` (configs.base.QuantConfig) or defaults."""
+        q = getattr(cfg, "quant", None)
+        kw = {}
+        if q is not None:
+            kw = {"weight_exponent": q.weight_exponent,
+                  "input_exponent": q.input_exponent,
+                  "residual_bits": q.residual_bits}
+        kw.update(overrides)
+        return cls(**kw)
+
+    def with_(self, **kw) -> "QuantRecipe":
+        return dataclasses.replace(self, **kw)
+
+    # -- application -------------------------------------------------------
+
+    def _quantize_leaf(self, w: jnp.ndarray) -> quant.QTensor:
+        if not self.per_channel or w.ndim < 2:
+            return quant.quantize_po2(w, self.weight_exponent, bits=self.bits,
+                                      rounding=self.rounding)
+        # Per-channel refinement: each output channel (last axis) shifts to
+        # its own no-saturation bound — extra precision for small channels,
+        # saturation-free casts for large ones, still power-of-2 shifts
+        # only (zero multiplier cost; stored as QTensor.axis_exponents).
+        lo = -(2 ** (self.bits - 1))
+        hi = 2 ** (self.bits - 1) - 1
+        wf = w.astype(jnp.float32)
+        axes = tuple(range(w.ndim - 1))
+        maxabs = jnp.max(jnp.abs(wf), axis=axes)
+        extra = jnp.floor(jnp.log2(hi / jnp.maximum(maxabs, 1e-30)))
+        extra = jnp.clip(extra - self.weight_exponent, -12, 12).astype(jnp.int32)
+        scaled = wf * jnp.exp2((self.weight_exponent + extra).astype(jnp.float32))
+        if self.rounding == "nearest":
+            q = jnp.floor(scaled + 0.5)
+        elif self.rounding == "floor":
+            q = jnp.floor(scaled)
+        else:
+            raise ValueError(f"unknown rounding {self.rounding!r}")
+        dtype = jnp.int8 if self.bits == 8 else jnp.int16
+        return quant.QTensor(values=jnp.clip(q, lo, hi).astype(dtype),
+                             exponent=self.weight_exponent,
+                             axis_exponents=extra)
+
+    def quantize(self, params: Pytree) -> Pytree:
+        """params -> tree with QTensor leaves (norms/biases stay float)."""
+        def one(leaf):
+            if not isinstance(leaf, jnp.ndarray) or \
+                    not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            if self.skip_norm_scales and leaf.ndim <= 1:
+                return leaf
+            return self._quantize_leaf(leaf)
+
+        return jax.tree.map(one, params)
+
+    def apply(self, params: Pytree) -> Pytree:
+        """PTQ round-trip: the float params the deployed engine actually
+        runs (int8 values de-scaled by their power-of-2 shifts)."""
+        return quant.dequantize_tree(self.quantize(params))
+
+    def quantized_bytes(self, params: Pytree) -> tuple[int, int]:
+        """(int bytes, residual float bytes) of the deployed tree."""
+        return quant.tree_quantized_bytes(self.quantize(params))

@@ -8,10 +8,10 @@ contracts over F independently per frame, the assembled window is
 bit-identical to embedding the whole window at once — so streaming
 logits are **bit-identical** to the offline ``jax.jit(models.kwt.forward)``
 program on the same audio window (both sides compiled, as production
-always is), in the float path and in every LUT path
-(``cfg.softmax_mode`` / ``cfg.act_approx`` flow through unchanged; the
-``--quantize`` serving pipeline of ``launch/serve.py`` applies to the
-params before they reach this module).
+always is), in the float path and in every LUT/Pallas path: callers pass
+a ``repro.runtime`` Engine's ``exec_cfg``/``params`` (or drive
+``Engine.stream_step`` directly), so PTQ and mode selection happen once
+at plan time before anything reaches this module.
 
 State is one pytree (frontend tail + feature ring + embedding ring):
 ``stream_step`` is pure ``(params, state, chunk) -> (state, logits)`` —

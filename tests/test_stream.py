@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import runtime
 from repro.configs import registry
 from repro.data import pipeline
-from repro.launch.serve import quantize_params
 from repro.models import kwt
 from repro.stream import detector as det
 from repro.stream import engine
@@ -91,17 +91,16 @@ def test_frontend_chunking_invariance_bitwise():
 # ---------------------------------------------------------------------------
 
 def _mode_setup(mode):
+    """Backend name -> (prepared params, pinned exec cfg) via the runtime
+    Engine — the single source of execution policy."""
     params = kwt.init_params(CFG, KEY)
-    if mode == "float":
-        return params, CFG
-    cfg = CFG.with_(softmax_mode=mode if mode != "lut_gelu" else "lut",
-                    act_approx="lut")
-    return quantize_params(params, CFG), cfg
+    eng = runtime.compile_model(CFG, params, backend=mode)
+    return eng.params, eng.exec_cfg
 
 
 @pytest.mark.parametrize("mode,chunk_hops", [
-    ("float", 1), ("float", 3), ("lut", 1),
-    ("lut_fixed", 1), ("lut_fixed", 3)])
+    ("float", 1), ("float", 3), ("lut_float", 1),
+    ("lut", 1), ("lut", 3)])
 def test_stream_bit_identical_to_offline(mode, chunk_hops):
     """The acceptance criterion: streaming logits == offline
     jax.jit(kwt.forward) on the same audio window, bit for bit, in the

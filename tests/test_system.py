@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import registry
-from repro.core import calibrate, quant
+from repro.core import calibrate
 from repro.data import pipeline
 from repro.models import kwt
 from repro.optim import adamw
@@ -58,16 +58,17 @@ def test_kwt_tiny_end_to_end(trained_kwt):
     assert acc_float > 0.75, f"float accuracy {acc_float}"
 
     # --- stage 2: PTQ, Table V best pair (weights 2^6, inputs 2^5) ---
-    qtree = quant.quantize_tree(params, weight_exponent=6)
-    qbytes, fbytes = quant.tree_quantized_bytes(qtree)
+    from repro import runtime
+    eng_q = runtime.compile_model(cfg, params, backend="float",
+                                  recipe=runtime.QuantRecipe.from_config(cfg))
+    qbytes, fbytes = eng_q.quantized_bytes
     assert qbytes < 2048           # ~1.6 kB of int8 weights (Table IX)
-    qparams = quant.dequantize_tree(qtree)
-    acc_q = _accuracy(cfg, qparams)
+    acc_q = _accuracy(eng_q.exec_cfg, eng_q.params)
     assert acc_q > acc_float - 0.10, (acc_float, acc_q)
 
     # --- stage 3: +Hardware (LUT softmax + LUT GELU, Q8.24) ---
-    hcfg = cfg.with_(softmax_mode="lut_fixed", act_approx="lut")
-    acc_h = _accuracy(hcfg, qparams)
+    eng_h = runtime.compile_model(cfg, params, backend="lut")
+    acc_h = _accuracy(eng_h.exec_cfg, eng_h.params)
     assert acc_h > acc_q - 0.08, (acc_q, acc_h)
     print(f"\nKWT-Tiny accuracies: float={acc_float:.3f} "
           f"quantised={acc_q:.3f} +LUT={acc_h:.3f}")
