@@ -1,0 +1,190 @@
+"""QAT end to end: train exactly the model the Engine deploys.
+
+The paper's accuracy-recovery half (§III retraining + §IV quantisation)
+as one pipeline on KWT-Tiny:
+
+1. Train the float baseline (paper Table IV, 1646 params).
+2. PTQ it (Table V best recipe) — the accuracy the old pipeline shipped.
+3. QAT fine-tune (repro.qat): eq-9 fake-quant weights + Q8.24 LUT
+   softmax/GELU in the loss forward, float shadow weights under AdamW.
+4. Optionally distill from a float KWT-1 teacher while quantising
+   (--distill; 35->2 head reduction + ablation-driven depth shrink).
+5. Export (repro.qat.export) and verify the acceptance contract: QAT
+   eval logits are BIT-IDENTICAL to the exported recipe on the ``lut``
+   Engine, and (--check-backends) the exported params run the whole
+   backend matrix.
+
+Run:  PYTHONPATH=src python examples/train_kws_qat.py [--steps 300]
+          [--qat-steps 200] [--distill] [--check-backends]
+Exits non-zero if export parity fails or QAT ends below PTQ accuracy
+(CI smoke contract).
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro import qat, runtime
+from repro.configs import registry
+from repro.data import pipeline
+from repro.models import kwt
+from repro.qat import distill as D
+
+
+def make_eval(cfg, exec_cfg, seed, n):
+    """Param-tree accuracy on one eval fold (seed 0: test fold; other
+    seeds: validation folds for checkpoint selection), jitted once."""
+    fwd = jax.jit(lambda p, x: kwt.forward(p, x, exec_cfg))
+    batches = pipeline.gsc_eval_set(seed, n=n, input_dim=cfg.input_dim)
+
+    def acc(deployed_params):
+        correct = total = 0
+        for b in batches:
+            pred = jnp.argmax(fwd(deployed_params, b["mfcc"]), -1)
+            correct += int(jnp.sum(pred == b["labels"]))
+            total += int(b["labels"].size)
+        return correct / total
+
+    return acc
+
+
+def accuracy(eng, n=512):
+    return make_eval(eng.cfg, eng.exec_cfg, 0, n)(eng.params)
+
+
+def make_distill_spec(cfg, args):
+    tcfg = D.teacher_config(registry.get("kwt-1").config, cfg)
+    print(f"[distill] training float KWT-1 teacher on the student grid "
+          f"({tcfg.n_layers} layers, {tcfg.n_classes} classes, "
+          f"{args.teacher_steps} steps)")
+    tparams = D.train_teacher(tcfg, args.teacher_steps, seed=args.seed + 1)
+    if args.teacher_keep_layers and \
+            args.teacher_keep_layers < tcfg.n_layers:
+        cal = [pipeline.keyword_batch(args.seed + 2, i, batch=64,
+                                      input_dim=tcfg.input_dim,
+                                      n_classes=tcfg.n_classes)
+               for i in range(2)]
+        tparams, tcfg = D.shrink_teacher(tparams, tcfg,
+                                         args.teacher_keep_layers, cal)
+        # the paper's §III loop is remove-THEN-RETRAIN: a chopped
+        # post-norm stack needs the retrain half before it can teach
+        tparams = D.train_teacher(tcfg, args.teacher_steps,
+                                  seed=args.seed + 1,
+                                  init_params=tparams)
+        print(f"[distill] surgeon shrink -> {tcfg.n_layers} highest-impact "
+              "teacher blocks (+retrain)")
+    tparams = D.reduce_head(tparams)
+    print(f"[distill] head reduced {registry.get('kwt-1').config.n_classes}"
+          f" -> {cfg.n_classes} classes")
+    return D.DistillSpec(tparams, tcfg.with_(n_classes=cfg.n_classes),
+                         alpha=args.distill_alpha,
+                         temperature=args.distill_temp)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300,
+                    help="float baseline training steps")
+    ap.add_argument("--qat-steps", type=int, default=None,
+                    help="QAT fine-tune steps (default: --steps)")
+    ap.add_argument("--distill", action="store_true",
+                    help="KD from a float KWT-1 teacher during QAT")
+    ap.add_argument("--teacher-steps", type=int, default=200)
+    ap.add_argument("--teacher-keep-layers", type=int, default=4,
+                    help="surgeon depth-shrink of the teacher (0: keep all)")
+    ap.add_argument("--distill-alpha", type=float, default=0.5)
+    ap.add_argument("--distill-temp", type=float, default=2.0)
+    ap.add_argument("--qat-backend", default="lut")
+    ap.add_argument("--check-backends", action="store_true",
+                    help="run the exported params across the full backend "
+                         "matrix (float/lut_float/lut/pallas)")
+    ap.add_argument("--eval-n", type=int, default=512)
+    ap.add_argument("--export-path", default=None,
+                    help="write the int8 artifact + recipe JSON here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    qat_steps = args.qat_steps if args.qat_steps is not None else args.steps
+
+    cfg = registry.get("kwt-tiny").config
+    print(f"KWT-Tiny QAT: {cfg.n_layers} layer, DIM={cfg.d_model}, "
+          f"{kwt.count_params(kwt.init_params(cfg, jax.random.PRNGKey(0)))}"
+          " params")
+
+    # [1] float baseline (distill.train_teacher is the generic float kwt
+    # training loop; on the student config it trains the 2-class task)
+    fparams = D.train_teacher(cfg, args.steps, seed=args.seed, lr=3e-3)
+    acc_f = accuracy(runtime.compile_model(cfg, fparams, backend="float"),
+                     args.eval_n)
+    print(f"\n[1] float32 accuracy:          {acc_f:.3f}")
+
+    # [2] PTQ (the old pipeline's deployment) under the same backend the
+    # QAT loss will train through (explicit recipe: PTQ even on backends
+    # that don't quantise by default)
+    eng_ptq = runtime.compile_model(cfg, fparams, backend=args.qat_backend,
+                                    recipe=runtime.QuantRecipe.from_config(cfg))
+    acc_ptq = accuracy(eng_ptq, args.eval_n)
+    print(f"[2] PTQ  {eng_ptq.describe()}")
+    print(f"    accuracy:                  {acc_ptq:.3f}")
+
+    # [3] QAT fine-tune (optionally distilled): best-checkpoint selection
+    # on a validation fold — step 0 IS the PTQ model, so the selected
+    # export never regresses below PTQ on the selection fold
+    spec = qat.QATSpec(
+        runtime.QuantRecipe.from_config(cfg),
+        qat.QATConfig(backend=args.qat_backend),
+        distill=make_distill_spec(cfg, args) if args.distill else None)
+    qparams, qstate = qat.finetune_qat(
+        cfg, fparams, spec, qat_steps, seed=args.seed,
+        fine_classes=35 if args.distill else None,
+        select_fn=make_eval(cfg, spec.exec_cfg(cfg), 5, 256))
+    ex = qat.export(qparams, spec, qstate)
+    eng_qat = runtime.compile_model(cfg, ex.params,
+                                    backend=args.qat_backend,
+                                    recipe=ex.recipe)
+    acc_qat = accuracy(eng_qat, args.eval_n)
+    tag = "QAT+KD" if args.distill else "QAT"
+    print(f"[3] {tag}  {eng_qat.describe()}")
+    print(f"    accuracy:                  {acc_qat:.3f}  "
+          f"(PTQ {acc_ptq:.3f}, float {acc_f:.3f})")
+
+    # [4] acceptance: QAT eval path == the exported engine under the
+    # trained backend, bit for bit
+    x = jnp.concatenate([b["mfcc"] for b in
+                         pipeline.gsc_eval_set(0, n=128,
+                                               input_dim=cfg.input_dim)])
+    ev = qat.eval_forward(cfg, spec, ex.recipe)(qparams, x)
+    if not bool(jnp.array_equal(ev, eng_qat.forward(x))):
+        print(f"FAIL: QAT eval logits != exported {args.qat_backend} "
+              "engine", file=sys.stderr)
+        return 1
+    print("[4] export parity: QAT eval logits BIT-IDENTICAL to the "
+          f"exported {args.qat_backend} engine")
+
+    if args.check_backends:
+        for b in runtime.available_backends():
+            eng = runtime.compile_model(cfg, ex.params, backend=b,
+                                        recipe=ex.recipe)
+            print(f"    backend {b:10s}: accuracy "
+                  f"{accuracy(eng, args.eval_n):.3f}  ({eng.describe()})")
+
+    if args.export_path:
+        from repro.qat.export import save as export_save
+        export_save(args.export_path, ex)
+        print(f"    wrote {args.export_path}.npz / .json")
+
+    # smoke contract: the selected QAT export must not regress below PTQ
+    # (selection fold guarantees >=; allow test-fold sampling noise)
+    if acc_qat < acc_ptq - 0.02:
+        print(f"FAIL: QAT accuracy {acc_qat:.3f} below PTQ {acc_ptq:.3f}",
+              file=sys.stderr)
+        return 1
+    print("qat demo complete.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

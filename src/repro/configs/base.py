@@ -23,6 +23,8 @@ class QuantConfig:
     softmax_mode: str = "lut"     # "exact" | "lut" | "lut_fixed"
     act_mode: str = "lut"         # LUT GELU / SiLU
     quantize_kv_cache: bool = False   # beyond-paper: int8 KV cache
+    per_channel: Optional[bool] = None  # None: registry default (LM-scale
+    #                                     families per-channel, kwt scalar)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +80,8 @@ class ModelConfig:
     # --- compile / distribution knobs ---
     remat: bool = True
     scan_layers: bool = True
-    attn_impl: str = "xla"        # xla | pallas
+    attn_impl: str = "xla"        # xla | flash_lut (kernels.ops.lut_attention;
+    #                               pinned by runtime backends / compile_model)
     seq_shard_activations: bool = False   # Megatron-SP style (hillclimb lever)
     scores_dtype: str = "float32"  # "bfloat16": halve attention-score HBM traffic
     pure_fsdp: bool = False        # shard params over (data x model), no TP

@@ -19,6 +19,12 @@ Dispatch contract used across the framework:
                ``repro.kernels`` (interpret vs Mosaic is the ``interpret``
                argument, pinned once at plan time by ``repro.runtime`` via
                ``cfg.kernel_interpret`` — never probed per call).
+
+Every non-exact mode is wrapped in a straight-through estimator
+(:func:`ste`): the forward value is the approx pipeline verbatim
+(bit-identical — custom_vjp primals trace the same ops), while
+``jax.grad`` sees the exact float op's vjp.  This is what lets
+``repro.qat`` put the deployed LUT numerics inside the training loss.
 """
 
 from __future__ import annotations
@@ -29,6 +35,59 @@ import numpy as np
 
 from repro.core import fixedpoint as fxp
 from repro.core import lut as lutlib
+
+
+def ste(primal_fn, smooth_fn):
+    """Straight-through estimator: forward is ``primal_fn`` verbatim (the
+    LUT / fixed-point / kernel pipeline, bit-identical to calling it
+    directly), backward is the vjp of ``smooth_fn`` (the exact float op)
+    evaluated at the same input.
+
+    This is what makes every approx mode usable inside ``jax.grad``
+    (repro.qat trains through the deployed numerics): the LUT gathers and
+    integer ops have zero/undefined gradients, so QAT follows the standard
+    STE reading — quantised forward, smooth backward (arXiv:2009.04465).
+
+    ``primal_fn``/``smooth_fn`` must not close over traced values — a
+    captured tracer escapes the custom_vjp when the bwd re-runs under
+    ``jax.remat``/``scan``.  Operands beyond ``x`` (e.g. the attention
+    mask) go through :func:`ste_masked` as explicit arguments.
+    """
+    @jax.custom_vjp
+    def f(x):
+        return primal_fn(x)
+
+    def fwd(x):
+        return primal_fn(x), x
+
+    def bwd(x, g):
+        _, vjp = jax.vjp(smooth_fn, x)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def ste_masked(primal_fn, smooth_fn):
+    """STE over ``(x, mask)``: the (possibly traced) boolean mask is an
+    explicit non-differentiable operand — closing over it instead leaks
+    the tracer out of the custom_vjp under ``jax.remat``/``scan`` (the
+    LM QAT train step rematerialises every block).  Its cotangent is the
+    float0 zero JAX expects for bool primals."""
+    @jax.custom_vjp
+    def f(x, mask):
+        return primal_fn(x, mask)
+
+    def fwd(x, mask):
+        return primal_fn(x, mask), (x, mask)
+
+    def bwd(res, g):
+        x, mask = res
+        _, vjp = jax.vjp(lambda v: smooth_fn(v, mask), x)
+        return vjp(g)[0], np.zeros(mask.shape, jax.dtypes.float0)
+
+    f.defvjp(fwd, bwd)
+    return f
 
 
 # ---------------------------------------------------------------------------
@@ -96,14 +155,16 @@ def softmax(x: jnp.ndarray, axis: int = -1, mode: str = "exact",
     if mode == "exact":
         return softmax_exact(x, axis)
     if mode == "lut":
-        return softmax_lut(x, axis, fixed=False, **kw)
-    if mode == "lut_fixed":
-        return softmax_lut(x, axis, fixed=True, **kw)
-    if mode == "pallas":
+        primal = lambda v: softmax_lut(v, axis, fixed=False, **kw)
+    elif mode == "lut_fixed":
+        primal = lambda v: softmax_lut(v, axis, fixed=True, **kw)
+    elif mode == "pallas":
         assert axis in (-1, x.ndim - 1), "pallas softmax reduces the last axis"
         from repro.kernels import ops
-        return ops.lut_softmax(x, fixed=True, interpret=interpret)
-    raise ValueError(f"unknown softmax mode {mode!r}")
+        primal = lambda v: ops.lut_softmax(v, fixed=True, interpret=interpret)
+    else:
+        raise ValueError(f"unknown softmax mode {mode!r}")
+    return ste(primal, lambda v: softmax_exact(v, axis))(x)
 
 
 def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
@@ -128,10 +189,14 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
         return p * (1.0 / jnp.maximum(den, 1e-30)).astype(jnp.bfloat16)
     s = s.astype(jnp.float32)
     neg = jnp.finfo(jnp.float32).min
-    if mode == "exact":
-        sm = s if mask is None else jnp.where(mask, s, neg)
+
+    def exact_f32(sv, mk):
+        sm = sv if mk is None else jnp.where(mk, sv, neg)
         out = jax.nn.softmax(sm, axis=-1)
-        return out if mask is None else jnp.where(mask, out, 0.0)
+        return out if mk is None else jnp.where(mk, out, 0.0)
+
+    if mode == "exact":
+        return exact_f32(s, mask)
     if mode == "pallas":
         # Kernel path: unmasked rows are the Pallas LUT pipeline verbatim
         # (bit-identical to ops.lut_softmax).  With a mask, masked lanes
@@ -139,36 +204,57 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
         # leak); we zero them and renormalise in f32, recovering the
         # structural exclusion of the jnp reference up to that rescale.
         from repro.kernels import ops
-        sm = s if mask is None else jnp.where(mask, s, neg)
-        out = ops.lut_softmax(sm, fixed=True, interpret=interpret)
-        if mask is not None:
-            out = jnp.where(mask, out, 0.0)
-            out = out / jnp.maximum(jnp.sum(out, axis=-1, keepdims=True),
-                                    1e-30)
-        return out
-    bank = lutlib.make_lut_bank()
-    sm = s if mask is None else jnp.where(mask, s, neg)
-    m = jnp.max(sm, axis=-1, keepdims=True)
-    z = jnp.clip(m - s, 0.0, lutlib.EXP_RANGE)
-    if mode == "lut":
-        num = jnp.take(jnp.asarray(bank.exp_f32),
-                       jnp.clip((z * lutlib.BINS_PER_UNIT).astype(jnp.int32),
-                                0, lutlib.N_EXP_ENTRIES - 1))
-        if mask is not None:
-            num = jnp.where(mask, num, 0.0)
-        return num / jnp.maximum(jnp.sum(num, axis=-1, keepdims=True), 1e-30)
-    if mode == "lut_fixed":
-        k_len = s.shape[-1]
-        pre = max(0, int(np.ceil(np.log2(max(k_len, 1)))) - 6)
-        z_q = fxp.to_fixed(z)
-        num_q = jnp.take(jnp.asarray(bank.exp_q24), lutlib.exp_index_from_q24(z_q))
-        if mask is not None:
-            num_q = jnp.where(mask, num_q, 0)
-        s_q = jnp.sum(_pre_shift(num_q, pre), axis=-1, keepdims=True)
-        s_q = jnp.maximum(s_q, 1)
-        inv_q = lutlib.reciprocal_q24(s_q, bank) >> pre
-        return fxp.to_float(fxp.fixed_mul(num_q, inv_q))
-    raise ValueError(f"unknown softmax mode {mode!r}")
+
+        def primal(sv, mk):
+            sm = sv if mk is None else jnp.where(mk, sv, neg)
+            out = ops.lut_softmax(sm, fixed=True, interpret=interpret)
+            if mk is not None:
+                out = jnp.where(mk, out, 0.0)
+                out = out / jnp.maximum(
+                    jnp.sum(out, axis=-1, keepdims=True), 1e-30)
+            return out
+    elif mode == "lut":
+        def primal(sv, mk):
+            bank = lutlib.make_lut_bank()
+            sm = sv if mk is None else jnp.where(mk, sv, neg)
+            m = jnp.max(sm, axis=-1, keepdims=True)
+            z = jnp.clip(m - sv, 0.0, lutlib.EXP_RANGE)
+            num = jnp.take(
+                jnp.asarray(bank.exp_f32),
+                jnp.clip((z * lutlib.BINS_PER_UNIT).astype(jnp.int32),
+                         0, lutlib.N_EXP_ENTRIES - 1))
+            if mk is not None:
+                num = jnp.where(mk, num, 0.0)
+            return num / jnp.maximum(
+                jnp.sum(num, axis=-1, keepdims=True), 1e-30)
+    elif mode == "lut_fixed":
+        def primal(sv, mk):
+            bank = lutlib.make_lut_bank()
+            sm = sv if mk is None else jnp.where(mk, sv, neg)
+            m = jnp.max(sm, axis=-1, keepdims=True)
+            z = jnp.clip(m - sv, 0.0, lutlib.EXP_RANGE)
+            k_len = sv.shape[-1]
+            pre = max(0, int(np.ceil(np.log2(max(k_len, 1)))) - 6)
+            z_q = fxp.to_fixed(z)
+            num_q = jnp.take(jnp.asarray(bank.exp_q24),
+                             lutlib.exp_index_from_q24(z_q))
+            if mk is not None:
+                num_q = jnp.where(mk, num_q, 0)
+            s_q = jnp.sum(_pre_shift(num_q, pre), axis=-1, keepdims=True)
+            s_q = jnp.maximum(s_q, 1)
+            inv_q = lutlib.reciprocal_q24(s_q, bank) >> pre
+            return fxp.to_float(fxp.fixed_mul(num_q, inv_q))
+    else:
+        raise ValueError(f"unknown softmax mode {mode!r}")
+    # STE: the approx pipeline verbatim in the forward pass, the exact
+    # masked softmax's gradient in the backward pass (QAT trains through
+    # the deployed numerics; see repro.qat).  The mask — often a tracer
+    # built inside the same remat'd block — is an explicit operand, never
+    # a closure capture.
+    if mask is None:
+        return ste(lambda sv: primal(sv, None),
+                   lambda sv: exact_f32(sv, None))(s)
+    return ste_masked(primal, exact_f32)(s, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -204,13 +290,15 @@ def gelu(x: jnp.ndarray, mode: str = "exact", interpret: bool = True,
     if mode == "exact":
         return gelu_exact(x)
     if mode == "lut":
-        return gelu_lut(x, interp=False, **kw)
-    if mode == "lut_interp":
-        return gelu_lut(x, interp=True, **kw)
-    if mode == "pallas":
+        primal = lambda v: gelu_lut(v, interp=False, **kw)
+    elif mode == "lut_interp":
+        primal = lambda v: gelu_lut(v, interp=True, **kw)
+    elif mode == "pallas":
         from repro.kernels import ops
-        return ops.lut_gelu(x, interpret=interpret)
-    raise ValueError(f"unknown gelu mode {mode!r}")
+        primal = lambda v: ops.lut_gelu(v, interpret=interpret)
+    else:
+        raise ValueError(f"unknown gelu mode {mode!r}")
+    return ste(primal, gelu_exact)(x)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +328,8 @@ def sigmoid_lut(x: jnp.ndarray) -> jnp.ndarray:
 def silu(x: jnp.ndarray, mode: str = "exact") -> jnp.ndarray:
     if mode == "exact":
         return jax.nn.silu(x.astype(jnp.float32))
-    return x.astype(jnp.float32) * sigmoid_lut(x)
+    return ste(lambda v: v.astype(jnp.float32) * sigmoid_lut(v),
+               lambda v: jax.nn.silu(v.astype(jnp.float32)))(x)
 
 
 def softplus(x: jnp.ndarray, mode: str = "exact") -> jnp.ndarray:

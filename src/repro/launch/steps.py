@@ -160,7 +160,7 @@ def _loss(cfg):
 
 
 def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
-                    sync_mesh=None, sync_per_channel=False):
+                    sync_mesh=None, sync_per_channel=False, qat=None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     Gradient accumulation over ``n_micro`` microbatches via lax.scan;
@@ -172,7 +172,20 @@ def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
     state — ``(params, opt_state, err, batch) -> (params, opt_state, err,
     metrics)`` with ``err`` from ``compress.init_error_state``.
     ``sync_per_channel`` selects per-channel payload scales.
+
+    ``qat`` (a ``repro.qat.train.QATSpec``) switches the step to
+    quantisation-aware training: the loss forward runs eq-9 fake-quant
+    params under a runtime Backend's LUT modes while AdamW updates the
+    float shadow weights; the step then additionally threads the QAT
+    state — ``(params, opt_state, qstate, [err,] batch) -> (params,
+    opt_state, qstate, [err,] metrics)`` with ``qstate`` from
+    ``qat.init_qat_state``.  Composes with ``sync_mesh``.
     """
+    if qat is not None:
+        from repro.qat import train as qat_train
+        return qat_train.make_qat_train_step(
+            cfg, shape, hp=hp, n_micro=n_micro, sync_mesh=sync_mesh,
+            sync_per_channel=sync_per_channel, qat=qat)
     hp = hp or hparams_for(cfg)
     n_micro = n_micro or microbatches(cfg, shape)
     loss_fn = _loss(cfg)

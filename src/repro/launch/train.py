@@ -74,6 +74,28 @@ def main(argv=None):
                          "slow axis (dist.compress)")
     ap.add_argument("--per-channel-scales", action="store_true",
                     help="per-channel payload scales for --compressed-grads")
+    ap.add_argument("--qat", action="store_true",
+                    help="quantisation-aware training: the loss forward "
+                         "runs eq-9 fake-quant params under --qat-backend's "
+                         "LUT modes (repro.qat)")
+    ap.add_argument("--qat-backend", default="lut",
+                    help="runtime backend whose numerics the QAT loss runs")
+    ap.add_argument("--qat-start-step", type=int, default=0,
+                    help="float warm-up steps before fake-quant activates")
+    ap.add_argument("--qat-learn-exponent", action="store_true",
+                    help="recalibrate the weight exponent from the shadow "
+                         "weights until --qat-freeze-exponent-step")
+    ap.add_argument("--qat-freeze-exponent-step", type=int, default=0,
+                    help="freeze the learned exponent after this step "
+                         "(0: keep recalibrating every step)")
+    ap.add_argument("--distill-teacher-arch", default=None,
+                    help="KWT only: float teacher arch for KD during QAT "
+                         "(e.g. kwt-1; head is reduced to the student's "
+                         "classes)")
+    ap.add_argument("--distill-teacher-steps", type=int, default=200,
+                    help="float training steps for the inline KD teacher")
+    ap.add_argument("--distill-alpha", type=float, default=0.5)
+    ap.add_argument("--distill-temp", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -86,6 +108,41 @@ def main(argv=None):
                              warmup_steps=max(2, args.steps // 10),
                              total_steps=max(args.steps, 10))
     mod = steps.model_module(cfg)
+
+    qat_spec = None
+    fine_classes = None
+    if args.qat:
+        from repro import qat as qat_mod
+        from repro.runtime import QuantRecipe
+        distill = None
+        if args.distill_teacher_arch:
+            if cfg.family != "kwt":
+                ap.error("--distill-teacher-arch is the KWT KD path "
+                         "(paper §III); LM QAT runs without a teacher")
+            from repro.qat import distill as distill_mod
+            tcfg = distill_mod.teacher_config(
+                registry.get(args.distill_teacher_arch).config, cfg)
+            print(f"[distill] training float teacher {tcfg.name} "
+                  f"({args.distill_teacher_steps} steps, "
+                  f"{tcfg.n_classes} classes)")
+            tparams = distill_mod.train_teacher(
+                tcfg, args.distill_teacher_steps, seed=args.seed + 1)
+            tparams = distill_mod.reduce_head(tparams)
+            distill = distill_mod.DistillSpec(
+                tparams, tcfg.with_(n_classes=cfg.n_classes),
+                alpha=args.distill_alpha, temperature=args.distill_temp)
+            # KD draws the fine-grained surrogate (coarsened to the
+            # student's classes) so the teacher stays on-distribution
+            fine_classes = tcfg.n_classes
+        qat_spec = qat_mod.QATSpec(
+            QuantRecipe.from_config(cfg),
+            qat_mod.QATConfig(
+                backend=args.qat_backend, start_step=args.qat_start_step,
+                learn_exponent=args.qat_learn_exponent,
+                freeze_exponent_step=args.qat_freeze_exponent_step),
+            distill=distill)
+        print(f"[qat] recipe {qat_spec.recipe} under backend="
+              f"{args.qat_backend}")
 
     from jax.sharding import NamedSharding
     p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
@@ -103,6 +160,10 @@ def main(argv=None):
         from repro.dist import compress
         err = compress.init_error_state(params) if args.compressed_grads \
             else None
+        qstate = None
+        if qat_spec is not None:
+            from repro import qat as qat_mod
+            qstate = qat_mod.init_qat_state(qat_spec)
 
         start_step = 0
         if args.ckpt_dir:
@@ -110,11 +171,16 @@ def main(argv=None):
             # save is async, so a crash can leave params one step ahead;
             # with --compressed-grads the error-feedback residuals are a
             # third tree (dropping them would break the telescoping
-            # drift bound at every restart)
+            # drift bound at every restart), and --qat adds the QAT state
+            # (float shadow weights are the params tree; the learned
+            # exponent + step counter must restore with them or the
+            # exported recipe would drift across restarts)
             cand = [manager.latest_step(args.ckpt_dir),
                     manager.latest_step(args.ckpt_dir + "/opt")]
             if args.compressed_grads:
                 cand.append(manager.latest_step(args.ckpt_dir + "/err"))
+            if qstate is not None:
+                cand.append(manager.latest_step(args.ckpt_dir + "/qat"))
             if cand[0] is not None and any(c is None for c in cand[1:]):
                 print(f"[restore] params checkpoint at step {cand[0]} has no "
                       "complete optimizer/error state — starting from step 0")
@@ -127,13 +193,17 @@ def main(argv=None):
                 if args.compressed_grads:
                     err = manager.restore(
                         args.ckpt_dir + "/err", latest, err)
+                if qstate is not None:
+                    qstate = manager.restore(
+                        args.ckpt_dir + "/qat", latest, qstate)
                 start_step = latest
 
         sync_mesh = mesh if args.compressed_grads else None
         train_step = jax.jit(
             steps.make_train_step(cfg, shape, hp, n_micro=1,
                                   sync_mesh=sync_mesh,
-                                  sync_per_channel=args.per_channel_scales),
+                                  sync_per_channel=args.per_channel_scales,
+                                  qat=qat_spec),
             donate_argnums=(0, 1))
 
         mon = StragglerMonitor()
@@ -143,12 +213,28 @@ def main(argv=None):
                 raise RuntimeError(
                     f"[injected failure] node lost at step {step} — rerun "
                     "the same command to recover from the last checkpoint")
-            batch = pipeline.lm_batch(
-                args.seed, step, global_batch=args.global_batch,
-                seq_len=args.seq_len, vocab_size=cfg.vocab_size) \
-                if cfg.family != "encdec" else _whisper_batch(args, cfg, step)
+            if cfg.family == "kwt":
+                batch = pipeline.keyword_batch(
+                    args.seed, step, batch=args.global_batch,
+                    input_dim=cfg.input_dim,
+                    n_classes=fine_classes or cfg.n_classes)
+                if fine_classes:
+                    batch = {"mfcc": batch["mfcc"],
+                             "labels": batch["labels"] % cfg.n_classes}
+            elif cfg.family == "encdec":
+                batch = _whisper_batch(args, cfg, step)
+            else:
+                batch = pipeline.lm_batch(
+                    args.seed, step, global_batch=args.global_batch,
+                    seq_len=args.seq_len, vocab_size=cfg.vocab_size)
             t0 = time.time()
-            if args.compressed_grads:
+            if qstate is not None and args.compressed_grads:
+                params, opt_state, qstate, err, metrics = train_step(
+                    params, opt_state, qstate, err, batch)
+            elif qstate is not None:
+                params, opt_state, qstate, metrics = train_step(
+                    params, opt_state, qstate, batch)
+            elif args.compressed_grads:
                 params, opt_state, err, metrics = train_step(
                     params, opt_state, err, batch)
             else:
@@ -169,10 +255,18 @@ def main(argv=None):
                 if err is not None:
                     manager.save(args.ckpt_dir + "/err", step + 1, err,
                                  blocking=True)
+                if qstate is not None:
+                    manager.save(args.ckpt_dir + "/qat", step + 1, qstate,
+                                 blocking=True)
                 pending = manager.save(args.ckpt_dir + "/opt", step + 1,
                                        opt_state, blocking=False)
         if pending is not None:
             pending.join()
+    if qat_spec is not None:
+        from repro import qat as qat_mod
+        ex = qat_mod.export(params, qat_spec, qstate)
+        print(f"[qat] exported recipe: {ex.recipe}; int8 bytes "
+              f"{ex.quantized_bytes[0]} + float {ex.quantized_bytes[1]}")
     print("training complete.")
     return params
 

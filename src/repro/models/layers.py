@@ -247,8 +247,21 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
         k = apply_rope(k, cos, sin)
 
     if cache is None:
-        out = sdpa(q, k, v, cfg, q_offset=0, kv_len_valid=kv_len_valid,
-                   causal=causal)
+        if _use_flash_lut(cfg, kv_len_valid):
+            # flash-LUT kernel path (kernels.lut_attention): online-softmax
+            # tiling with the paper's LUT exp, routed here by the runtime
+            # Backend / compile_model(attention="flash_lut").  Cacheless
+            # full/causal attention only; ring-buffer and windowed layouts
+            # keep the XLA sdpa path.
+            from repro.kernels import ops
+            out = ops.lut_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2), causal=causal,
+                interpret=cfg.kernel_interpret)
+            out = jnp.swapaxes(out, 1, 2)
+        else:
+            out = sdpa(q, k, v, cfg, q_offset=0, kv_len_valid=kv_len_valid,
+                       causal=causal)
         new_cache = None
     elif _kv_quantized(cfg):
         idx = cache_index
@@ -292,6 +305,13 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
 
 def _kv_quantized(cfg) -> bool:
     return bool(cfg.quant and cfg.quant.quantize_kv_cache)
+
+
+def _use_flash_lut(cfg, kv_len_valid) -> bool:
+    """The flash-LUT kernel serves the cacheless full/causal layouts; a
+    sliding window or explicit validity mask needs sdpa's banding."""
+    return (cfg.attn_impl == "flash_lut" and kv_len_valid is None
+            and not cfg.sliding_window)
 
 
 def init_kv_cache(cfg, batch, max_len, dtype=None):

@@ -1,0 +1,29 @@
+"""repro.qat — quantisation-aware training for the deployed numerics.
+
+Trains exactly the model the Engine deploys: the loss forward runs
+eq-9 fake-quant weights (STE, ``qat.fakequant``) under a runtime
+Backend's LUT execution modes, AdamW updates float shadow weights, and
+``qat.export`` collapses the result into a ``QuantRecipe`` + int8 params
+whose ``runtime.compile_model(..., backend="lut")`` logits are
+BIT-IDENTICAL to the QAT eval path.  ``qat.distill`` adds KD from a
+float KWT-1 teacher (paper §III's 35->2 retraining route).
+
+    spec = qat.QATSpec(runtime.QuantRecipe.from_config(cfg))
+    step = steps.make_train_step(cfg, shape, hp, qat=spec)
+    qstate = qat.init_qat_state(spec)
+    params, opt, qstate, metrics = step(params, opt, qstate, batch)
+    ex = qat.export(params, spec, qstate)
+    eng = runtime.compile_model(cfg, ex.params, backend="lut",
+                                recipe=ex.recipe)
+"""
+
+from repro.qat.export import QATExport, eval_forward, export
+from repro.qat.fakequant import (calibrate_exponent, fake_quant,
+                                 fake_quant_input, fake_quant_tree)
+from repro.qat.train import (QATConfig, QATSpec, finetune_qat,
+                             init_qat_state, make_qat_train_step, qat_params)
+
+__all__ = ["QATConfig", "QATExport", "QATSpec", "calibrate_exponent",
+           "eval_forward", "export", "fake_quant", "fake_quant_input",
+           "fake_quant_tree", "finetune_qat", "init_qat_state",
+           "make_qat_train_step", "qat_params"]

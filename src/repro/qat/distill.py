@@ -1,0 +1,151 @@
+"""Knowledge distillation into the quantised student (paper §III route).
+
+The paper's headline shrink — KWT-1 retrained 369x smaller (35 -> 2
+classes) with ~10% accuracy loss — is a *retraining* result, and KD is
+the strongest retraining signal we can give the quantised student: a
+float KWT-1 teacher's soft posteriors carry the inter-class structure the
+2-class hard labels throw away (hardware-aware-training line,
+arXiv:2009.04465; sub-8-bit KWS QAT, arXiv:2207.06920).
+
+Pieces:
+
+* :func:`teacher_config` — a KWT-1 teacher on the *student's* input grid
+  (KD needs a shared input space; depth/width stay KWT-1's).
+* :func:`train_teacher` — float teacher training on the n-class surrogate
+  task (the synthetic GSC generator is class-count-generic and classes
+  {0, 1} coincide distributionally with the student's binary task).
+* :func:`reduce_head` — the 35 -> 2 head reduction: the kept keyword
+  column becomes student class 1, the remaining columns pool (mean) into
+  the background class 0.
+* :func:`shrink_teacher` — ablation-driven depth shrink via
+  ``tools.surgeon`` (lowest-impact blocks removed first) so the per-step
+  KD forward is cheap.
+* :class:`DistillSpec` / :func:`make_distill_loss` — the KD loss
+  ``(1-alpha)*CE + alpha*T^2*KL(teacher_T || student_T)`` in the shape
+  ``steps``' loss contract expects; plugged into the QAT step via
+  ``QATSpec(distill=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kwt
+from repro.optim import adamw
+
+Pytree = Any
+
+
+def teacher_config(teacher_cfg, student_cfg):
+    """The teacher re-gridded onto the student's MFCC input (and float
+    execution modes): KD evaluates both models on the same batch."""
+    return teacher_cfg.with_(input_dim=student_cfg.input_dim,
+                             patch_dim=(student_cfg.input_dim[0], 1),
+                             softmax_mode="exact", act_approx="exact")
+
+
+def train_teacher(tcfg, steps: int, seed: int = 0, batch: int = 64,
+                  lr: float = 3e-3, init_params: Pytree | None = None):
+    """Float teacher training on the synthetic n-class keyword task.
+    ``init_params`` resumes from an existing tree — the retrain half of
+    the paper's iterative remove-then-retrain shrink (§III)."""
+    from repro.data import pipeline
+
+    hp = adamw.HParams(lr=lr, warmup_steps=max(2, steps // 10),
+                       total_steps=max(steps, 10), weight_decay=0.0)
+    params = init_params if init_params is not None else \
+        kwt.init_params(tcfg, jax.random.PRNGKey(seed))
+    state = adamw.init(params, hp)
+
+    @jax.jit
+    def step(params, state, b):
+        loss, grads = jax.value_and_grad(kwt.loss_fn)(params, b, tcfg)
+        params, state, _ = adamw.update(grads, state, params, hp,
+                                        scan_stacked=False)
+        return params, state, loss
+
+    for i in range(steps):
+        b = pipeline.keyword_batch(seed, i, batch=batch,
+                                   input_dim=tcfg.input_dim,
+                                   n_classes=tcfg.n_classes)
+        params, state, _ = step(params, state, b)
+    return params
+
+
+def reduce_head(tparams: Pytree, keyword_classes=None) -> Pytree:
+    """Collapse an n-class head to the student's 2 classes (paper §III,
+    35 -> 2).
+
+    ``keyword_classes`` are the teacher columns that mean-pool into
+    student class 1 (the keyword); every other column pools into the
+    background class 0.  Default: the odd classes — the fine-grained
+    surrogate's coarsening rule (``data.pipeline.keyword_batch``: class c
+    is a variant of binary class ``c % 2``).  Only the head changes; the
+    encoder transfers as-is.
+    """
+    hw, hb = tparams["head_w"], tparams["head_b"]
+    n = hw.shape[-1]
+    if keyword_classes is None:
+        keyword_classes = range(1, n, 2)
+    kw_idx = jnp.asarray(sorted(set(int(c) for c in keyword_classes)))
+    assert 0 < kw_idx.shape[0] < n, "keyword classes must be a proper subset"
+    bg_idx = jnp.asarray([c for c in range(n)
+                          if c not in set(kw_idx.tolist())])
+    bg_w = jnp.mean(hw[:, bg_idx], axis=-1, keepdims=True)
+    kw_w = jnp.mean(hw[:, kw_idx], axis=-1, keepdims=True)
+    bg_b = jnp.mean(hb[bg_idx])[None]
+    kw_b = jnp.mean(hb[kw_idx])[None]
+    return {**tparams,
+            "head_w": jnp.concatenate([bg_w, kw_w], axis=-1),
+            "head_b": jnp.concatenate([bg_b, kw_b])}
+
+
+def shrink_teacher(tparams: Pytree, tcfg, keep_layers: int,
+                   batches, loss_fn=kwt.loss_fn):
+    """Ablation-driven depth shrink (tools.surgeon): score each block by
+    its ablation loss increase and keep only the ``keep_layers`` highest-
+    impact blocks — the cheap KD teacher feeding the distill student."""
+    from repro.tools import surgeon
+
+    _, scores = surgeon.ablation_scores(tparams, tcfg, batches, loss_fn)
+    shrunk = surgeon.shrink_params(tparams, scores, keep=keep_layers)
+    return shrunk, tcfg.with_(n_layers=keep_layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillSpec:
+    """KD configuration: a (reduced-head) float teacher + loss weights."""
+
+    teacher_params: Any
+    teacher_cfg: Any
+    alpha: float = 0.5             # KD weight: (1-a)*CE + a*KD
+    temperature: float = 2.0
+
+
+def make_distill_loss(spec: DistillSpec):
+    """A ``loss(params, batch, cfg)`` in the ``steps`` contract: CE on the
+    hard labels + temperature-softened KL to the float teacher.  ``cfg``
+    is the *student's* exec config (the QAT step passes the backend-pinned
+    one), so the student side runs the deployed numerics while the
+    teacher stays exact float."""
+    t = float(spec.temperature)
+    a = float(spec.alpha)
+
+    def loss(params, batch, cfg):
+        s_logits = kwt.forward(params, batch["mfcc"], cfg)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(s_logits, axis=-1)
+        gold = jnp.take_along_axis(s_logits, labels[:, None], axis=-1)[:, 0]
+        ce = jnp.mean(logz - gold)
+        t_logits = jax.lax.stop_gradient(kwt.forward(
+            spec.teacher_params, batch["mfcc"], spec.teacher_cfg))
+        t_soft = jax.nn.log_softmax(t_logits / t, axis=-1)
+        s_soft = jax.nn.log_softmax(s_logits / t, axis=-1)
+        kd = jnp.mean(jnp.sum(jnp.exp(t_soft) * (t_soft - s_soft), axis=-1))
+        return (1.0 - a) * ce + a * (t * t) * kd
+
+    return loss

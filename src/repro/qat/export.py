@@ -1,0 +1,115 @@
+"""Collapse a trained QAT state into the deployable artifact.
+
+``export(params, spec, qstate)`` freezes the learned weight exponent into
+a ``QuantRecipe`` and quantises the float shadow weights through it —
+exactly what ``runtime.compile_model(cfg, params, backend="lut",
+recipe=...)`` would do at plan time.  Because the QAT forward ran
+``po2_fake_quant`` (the recipe's own cast) the whole way, the contract is
+**bit-identity**: :func:`eval_forward` logits == the exported engine's
+logits, array_equal, not allclose (tests/test_qat.py; the PR's acceptance
+criterion).
+
+The exported ``QATExport`` serialises: ``recipe.to_dict()`` round-trips
+through JSON and ``qparams`` is the int8 QTensor tree (the ROM image a
+real device would flash, plus its byte accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.qat import fakequant
+from repro.qat.train import QATSpec
+from repro.runtime.recipe import QuantRecipe
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class QATExport:
+    """The train->deploy handoff: float shadow weights + the recipe that
+    turns them into the deployed int8 form.
+
+    Deploy with ``runtime.compile_model(cfg, ex.params, backend="lut",
+    recipe=ex.recipe)`` (or any quantising backend); ``ex.qparams`` /
+    ``ex.quantized_bytes`` are the int8 artifact and its footprint.
+    """
+
+    recipe: QuantRecipe
+    params: Pytree                 # float shadow weights (engine input)
+    qparams: Pytree                # QTensor tree (int8 deploy artifact)
+    quantized_bytes: tuple        # (int bytes, residual float bytes)
+
+    @property
+    def deployed_params(self) -> Pytree:
+        """The float tree the engine actually runs (PTQ round-trip)."""
+        return quant.dequantize_tree(self.qparams)
+
+    def recipe_json(self) -> str:
+        return json.dumps(self.recipe.to_dict(), indent=2)
+
+
+def export(params: Pytree, spec: QATSpec, qstate: dict | None = None
+           ) -> QATExport:
+    """Freeze a QAT run: learned exponent -> recipe, shadow -> int8."""
+    recipe = spec.recipe
+    if qstate is not None and spec.config.learn_exponent:
+        recipe = recipe.with_(
+            weight_exponent=int(qstate["weight_exponent"]))
+    qtree = recipe.quantize(params)
+    return QATExport(recipe=recipe, params=params, qparams=qtree,
+                     quantized_bytes=quant.tree_quantized_bytes(qtree))
+
+
+def eval_forward(cfg, spec: QATSpec, recipe: QuantRecipe | None = None):
+    """The QAT *eval* path: jitted forward through the fake-quant weights
+    under the backend's exec config — the program whose logits must be
+    bit-identical to the exported engine's.
+
+    The ``optimization_barrier`` between fake-quant and the encoder keeps
+    XLA from fusing the quantiser into the model (the PR-2 lesson: fusion
+    across that seam makes rounding producer-dependent).
+    """
+    from repro.launch import steps
+
+    recipe = recipe or spec.recipe
+    exec_cfg = spec.exec_cfg(cfg)
+    mod = steps.model_module(cfg)
+
+    @jax.jit
+    def forward(params, x):
+        fq = fakequant.fake_quant_tree(params, recipe)
+        fq = jax.lax.optimization_barrier(fq)
+        return mod.forward(fq, x, exec_cfg)
+
+    return forward
+
+
+def save(path: str, ex: QATExport) -> None:
+    """Write the deploy artifact: recipe JSON + int8/float leaves (npz)."""
+    import numpy as np
+
+    leaves = jax.tree.leaves(
+        ex.qparams, is_leaf=lambda x: isinstance(x, quant.QTensor))
+    arrays, meta = {}, []
+    for i, leaf in enumerate(leaves):
+        if isinstance(leaf, quant.QTensor):
+            arrays[f"leaf_{i}_values"] = np.asarray(leaf.values)
+            meta.append({"kind": "qtensor", "exponent": leaf.exponent,
+                         "per_channel": leaf.axis_exponents is not None})
+            if leaf.axis_exponents is not None:
+                arrays[f"leaf_{i}_axis_exponents"] = np.asarray(
+                    leaf.axis_exponents)
+        else:
+            arrays[f"leaf_{i}_values"] = np.asarray(leaf)
+            meta.append({"kind": "float"})
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump({"recipe": ex.recipe.to_dict(), "leaves": meta,
+                   "quantized_bytes": list(ex.quantized_bytes)}, f, indent=2)

@@ -1,0 +1,102 @@
+"""Straight-through-estimator fake-quant primitives (paper eq 9 in the loss).
+
+Forward values come from :func:`repro.runtime.recipe.po2_fake_quant` — the
+SAME function ``QuantRecipe.quantize`` uses for PTQ — so a QAT forward
+pass runs bit-identically the weights the deployed engine will run
+(export-parity contract, ``repro.qat.export``).  Backward is *clipped*
+STE: the cotangent passes through unchanged where the eq-9 cast did not
+saturate and is zeroed where it clipped (saturated weights can only be
+recovered by the shrinking shadow value, not by gradient noise —
+arXiv:2009.04465 §3).
+
+The exponent argument is traced (f32), so QAT exponent *learning* — the
+per-step recalibration of the Table V scale from the live shadow weights
+— stays inside one jitted train step (``repro.qat.train``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.recipe import QuantRecipe
+
+Pytree = Any
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant(w: jnp.ndarray, exponent: jnp.ndarray,
+               recipe: QuantRecipe) -> jnp.ndarray:
+    """Quantise-dequantise one weight leaf at ``2^exponent`` (eq 9).
+
+    Forward: bit-identical to ``recipe.with_(weight_exponent=e)
+    .apply({w})`` (shared ``po2_fake_quant`` math).  Backward: clipped STE
+    on ``w``; ``exponent`` receives a zero cotangent (it is calibrated,
+    not descended — power-of-2 scales have no useful gradient).
+    """
+    fq, _ = recipe.fake_quant_leaf(w, exponent)
+    return fq
+
+
+def _fq_fwd(w, exponent, recipe):
+    fq, unsat = recipe.fake_quant_leaf(w, exponent)
+    return fq, (unsat, exponent)
+
+
+def _fq_bwd(recipe, res, g):
+    unsat, exponent = res
+    return (jnp.where(unsat, g, 0.0).astype(g.dtype),
+            jnp.zeros_like(exponent))
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_tree(params: Pytree, recipe: QuantRecipe,
+                    exponent=None) -> Pytree:
+    """STE fake-quant of a parameter tree.
+
+    Leaf selection mirrors ``QuantRecipe.quantize`` exactly (norms/biases
+    stay float, paper §IV); forward values are bit-identical to
+    ``recipe.apply(params)``.  ``exponent`` (scalar, possibly traced)
+    overrides the recipe's static weight exponent — the QAT
+    exponent-learning hook.
+    """
+    e = jnp.asarray(recipe.weight_exponent if exponent is None else exponent,
+                    jnp.float32)
+
+    def one(leaf):
+        if not recipe._quantizes(leaf):
+            return leaf
+        return fake_quant(leaf, e, recipe)
+
+    return jax.tree.map(one, params)
+
+
+def fake_quant_input(x: jnp.ndarray, recipe: QuantRecipe) -> jnp.ndarray:
+    """STE fake-quant of model *inputs* at the Table V input exponent
+    (2^5 best row) — optional in QAT (the deployed engines feed float
+    features, so matching them means leaving this off; the flag exists
+    for studying the paper's static input quantisation under training)."""
+    input_recipe = recipe.with_(weight_exponent=recipe.input_exponent,
+                                per_channel=False, skip_norm_scales=False)
+    return fake_quant(x, jnp.asarray(recipe.input_exponent, jnp.float32),
+                      input_recipe)
+
+
+def calibrate_exponent(params: Pytree, recipe: QuantRecipe) -> jnp.ndarray:
+    """Traced analytic no-saturation weight exponent for the current shadow
+    weights: largest y with ``floor(max|w| * 2^y)`` unsaturated across all
+    quantised leaves (the in-jit counterpart of ``quant.choose_exponent``
+    / ``QuantRecipe.calibrated``).  Clipped to [0, 14] so a transient
+    all-zero leaf cannot blow the exponent up."""
+    hi = 2 ** (recipe.bits - 1) - 1
+    exps = [jnp.floor(jnp.log2(
+        hi / jnp.maximum(jnp.max(jnp.abs(leaf.astype(jnp.float32))), 1e-30)))
+        for leaf in jax.tree.leaves(params) if recipe._quantizes(leaf)]
+    if not exps:
+        return jnp.asarray(float(recipe.weight_exponent), jnp.float32)
+    return jnp.clip(jnp.stack(exps).min(), 0.0, 14.0)

@@ -1,0 +1,275 @@
+"""Quantisation-aware training: the deployed numerics inside the loss.
+
+The QAT train step is ``launch.steps.make_train_step``'s quantised mode
+(``steps.make_train_step(..., qat=QATSpec(...))`` delegates here): the
+loss forward runs fake-quant params (``qat.fakequant``, STE) under the
+execution config of a ``repro.runtime`` backend (default ``"lut"`` —
+Q8.24 LUT softmax + LUT GELU, the '+Hardware' numerics), while the float
+*shadow* weights are what ``optim.adamw`` updates.  State threads a small
+``qstate`` pytree::
+
+    step(params, opt_state, qstate, batch) -> (params, opt_state, qstate, metrics)
+    # with sync_mesh (dist.compress):
+    step(params, opt_state, qstate, err, batch) -> (..., qstate, err, metrics)
+
+``qstate = {"step", "weight_exponent"}`` checkpoints/restores through
+``checkpoint.manager`` like any other tree (tests/test_qat.py round-trips
+it bit-exactly and resumes deterministically).
+
+Knobs (QATConfig): delayed start (float warm-up steps before fake-quant
+activates), exponent learning (per-step recalibration of the Table V
+weight exponent from the live shadow weights) with a freeze step, optional
+eq-9 input fake-quant, and optional distillation (``qat.distill``) from a
+float teacher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.qat import fakequant
+from repro.runtime import backends
+from repro.runtime.recipe import QuantRecipe
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    """How the quantised forward enters training.
+
+    ``backend`` names the runtime Backend whose softmax/act modes the loss
+    runs under (the deployed numerics; ``"lut"`` = Q8.24 pipeline).
+    ``start_step`` delays weight fake-quant (float warm-up; LUT activation
+    modes are structural in the compiled step and active throughout).
+    ``learn_exponent`` recalibrates the weight exponent from the shadow
+    weights every step until ``freeze_exponent_step`` (``0`` = never
+    freeze), then freezes it — the learned value exports into the
+    ``QuantRecipe`` (``qat.export``).  ``quantize_inputs`` applies the
+    eq-9 input cast (Table V inputs 2^5) to float batch features during
+    training only.
+    """
+
+    backend: str = "lut"
+    start_step: int = 0
+    learn_exponent: bool = False
+    freeze_exponent_step: int = 0      # 0: recalibrate every step
+    quantize_inputs: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class QATSpec:
+    """Everything ``steps.make_train_step(qat=...)`` needs: the recipe
+    (quantiser semantics — ONE source of truth with PTQ/engine) and the
+    training-side knobs."""
+
+    recipe: QuantRecipe
+    config: QATConfig = QATConfig()
+    distill: Optional[Any] = None      # qat.distill.DistillSpec
+
+    def exec_cfg(self, cfg):
+        """The model config the QAT loss forward actually runs: the
+        backend's approx modes pinned exactly as the Engine would."""
+        return backends.get_backend(self.config.backend).configure(cfg)
+
+
+def init_qat_state(spec: QATSpec) -> dict:
+    return {"step": jnp.zeros((), jnp.int32),
+            "weight_exponent": jnp.asarray(
+                float(spec.recipe.weight_exponent), jnp.float32)}
+
+
+def _fake_quant_batch(batch: dict, recipe: QuantRecipe) -> dict:
+    """eq-9 cast on the float feature entries (mfcc/frames); int token
+    ids and labels pass through."""
+    def one(x):
+        if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype,
+                                                         jnp.floating):
+            return fakequant.fake_quant_input(x, recipe)
+        return x
+    return {k: one(v) for k, v in batch.items()}
+
+
+def _select_active(active, fq: Pytree, params: Pytree) -> Pytree:
+    """Fake-quant values once QAT is active, raw shadow weights during
+    the delayed-start warm-up (the ONE implementation of the gate — the
+    train-step loss and the qat_params helper both use it)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(active, a, b.astype(a.dtype)), fq, params)
+
+
+def qat_params(params: Pytree, spec: QATSpec, qstate: dict,
+               exponent=None) -> Pytree:
+    """The params the loss forward runs this step: fake-quant once active,
+    raw float shadow weights during the delayed-start warm-up."""
+    e = qstate["weight_exponent"] if exponent is None else exponent
+    fq = fakequant.fake_quant_tree(params, spec.recipe, exponent=e)
+    return _select_active(qstate["step"] >= spec.config.start_step,
+                          fq, params)
+
+
+def next_exponent(params: Pytree, spec: QATSpec, qstate: dict) -> jnp.ndarray:
+    """This step's weight exponent: recalibrated from the live shadow
+    weights while learning (until the freeze step; 0 = never freeze),
+    or the recipe's static Table V value when learning is off."""
+    e = qstate["weight_exponent"]
+    if not spec.config.learn_exponent:
+        return e
+    e_new = fakequant.calibrate_exponent(params, spec.recipe)
+    if spec.config.freeze_exponent_step <= 0:
+        return e_new
+    return jnp.where(qstate["step"] < spec.config.freeze_exponent_step,
+                     e_new, e)
+
+
+def make_qat_train_step(cfg, shape, hp=None, n_micro=None, sync_mesh=None,
+                        sync_per_channel=False, *, qat: QATSpec):
+    """The QAT reading of ``steps.make_train_step`` (which delegates here).
+
+    Per step: (1) resolve this step's weight exponent (learning /
+    frozen), (2) fake-quant the shadow params (STE) and run the loss
+    under the backend's approx modes — plain CE, or KD when
+    ``qat.distill`` is set, (3) optionally compress-sync grads
+    (``dist.compress``), (4) AdamW on the float shadow weights,
+    (5) advance ``qstate``.
+    """
+    from repro.launch import steps  # late: steps imports us the same way
+
+    hp = hp or steps.hparams_for(cfg)
+    n_micro = n_micro or steps.microbatches(cfg, shape)
+    exec_cfg = qat.exec_cfg(cfg)
+    base_loss = steps._loss(cfg)
+    if qat.distill is not None:
+        from repro.qat import distill as distill_mod
+        base_loss = distill_mod.make_distill_loss(qat.distill)
+
+    def loss_at(params, batch, e, active):
+        fq = fakequant.fake_quant_tree(params, qat.recipe, exponent=e)
+        run = _select_active(active, fq, params)
+        if qat.config.quantize_inputs:
+            batch = _fake_quant_batch(batch, qat.recipe)
+        return base_loss(run, batch, exec_cfg)
+
+    def split_micro(batch):
+        def f(x):
+            b = x.shape[0]
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+        return jax.tree.map(f, batch)
+
+    def compute_grads(params, batch, e, active):
+        if n_micro == 1:
+            return jax.value_and_grad(loss_at)(params, batch, e, active)
+        micro = split_micro(batch)
+
+        def body(acc, mb):
+            l, g = jax.value_and_grad(loss_at)(params, mb, e, active)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n_micro, acc, g)
+            return acc, l
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, losses = jax.lax.scan(body, zeros, micro)
+        return jnp.mean(losses), grads
+
+    def finish(loss, grads, opt_state, params, qstate, e, active):
+        new_params, new_opt, metrics = adamw.update(
+            grads, opt_state, params, hp, scan_stacked=cfg.scan_layers)
+        metrics.update(loss=loss, weight_exponent=e,
+                       qat_active=active.astype(jnp.float32))
+        new_q = {"step": qstate["step"] + 1, "weight_exponent": e}
+        return new_params, new_opt, new_q, metrics
+
+    if sync_mesh is None:
+        def train_step(params, opt_state, qstate, batch):
+            e = next_exponent(params, qat, qstate)
+            active = qstate["step"] >= qat.config.start_step
+            loss, grads = compute_grads(params, batch, e, active)
+            return finish(loss, grads, opt_state, params, qstate, e, active)
+        return train_step
+
+    from repro.dist import compress
+
+    def train_step_synced(params, opt_state, qstate, err, batch):
+        e = next_exponent(params, qat, qstate)
+        active = qstate["step"] >= qat.config.start_step
+        loss, grads = compute_grads(params, batch, e, active)
+        grads, err = compress.compressed_grad_sync(
+            grads, err, sync_mesh, per_channel=sync_per_channel)
+        new_params, new_opt, new_q, metrics = finish(
+            loss, grads, opt_state, params, qstate, e, active)
+        return new_params, new_opt, new_q, err, metrics
+
+    return train_step_synced
+
+
+def finetune_qat(cfg, params, spec: QATSpec, n_steps: int, *, lr: float = 1e-3,
+                 batch: int = 64, seed: int = 0, data_offset: int = 100_000,
+                 fine_classes: int | None = None, select_fn=None,
+                 select_every: int = 25):
+    """Host-side KWT QAT fine-tune loop (the examples/benchmarks driver).
+
+    Starts from float ``params`` (a trained baseline or a fresh init),
+    runs ``n_steps`` of the QAT step on a fresh data fold, and returns
+    ``(params, qstate)``.  ``fine_classes`` draws the GSC-35-style
+    fine-grained surrogate batches coarsened to binary labels (the KD
+    regime: the teacher stays on-distribution, the student sees the full
+    variant spread).
+
+    ``select_fn(deployed_params) -> score`` enables best-checkpoint
+    selection on a *validation* fold: every ``select_every`` steps (plus
+    step 0 and the final step) the candidate export is scored, and the
+    best state wins.  Step 0's export IS the PTQ model, so a selected QAT
+    run never ships worse than PTQ on the selection fold — report final
+    accuracy on a disjoint test fold.
+    """
+    from repro.configs.base import ShapeSpec
+    from repro.data import pipeline
+    from repro.launch import steps
+
+    assert cfg.family == "kwt", "finetune_qat drives the KWT surrogate task"
+    shape = ShapeSpec("qat_ft", cfg.input_dim[1], batch, "train")
+    hp = adamw.HParams(lr=lr, warmup_steps=max(2, n_steps // 10),
+                       total_steps=max(n_steps, 10), weight_decay=0.0)
+    step = jax.jit(steps.make_train_step(cfg, shape, hp, n_micro=1,
+                                         qat=spec))
+    opt = adamw.init(params, hp)
+    qstate = init_qat_state(spec)
+    best = None
+
+    def consider(p, qs):
+        nonlocal best
+        if select_fn is None:
+            return
+        recipe = spec.recipe
+        if spec.config.learn_exponent:
+            recipe = recipe.with_(weight_exponent=int(qs["weight_exponent"]))
+        score = float(select_fn(recipe.apply(p)))
+        if best is None or score > best[0]:
+            best = (score, p, qs)
+
+    consider(params, qstate)
+    for i in range(n_steps):
+        b = pipeline.keyword_batch(
+            seed, data_offset + i, batch=batch, input_dim=cfg.input_dim,
+            n_classes=fine_classes or cfg.n_classes)
+        if fine_classes:
+            b = {"mfcc": b["mfcc"], "labels": b["labels"] % cfg.n_classes}
+        params, opt, qstate, m = step(params, opt, qstate, b)
+        # divergence guard on the selection cadence only — a per-step
+        # host read of the loss would serialise batch generation against
+        # device compute for the whole loop
+        if (i + 1) % select_every == 0 and i != n_steps - 1:
+            assert bool(jnp.isfinite(m["loss"])), "QAT loss diverged"
+            consider(params, qstate)
+    if n_steps > 0:
+        assert bool(jnp.isfinite(m["loss"])), "QAT loss diverged"
+    consider(params, qstate)
+    if best is not None:
+        return best[1], best[2]
+    return params, qstate

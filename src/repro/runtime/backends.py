@@ -42,12 +42,21 @@ class Backend:
     quantize: bool = False
     uses_lut: bool = False
     uses_kernels: bool = False
+    attention: str = "xla"         # xla | flash_lut (kernels.lut_attention)
 
-    def configure(self, cfg, *, interpret: bool | None = None):
+    def configure(self, cfg, *, interpret: bool | None = None,
+                  attention: str | None = None):
         """Pin this backend's execution modes onto a ModelConfig.  The ONLY
-        place in the tree that mutates softmax_mode / act_approx."""
-        kw = dict(softmax_mode=self.softmax_mode, act_approx=self.act_approx)
-        if self.uses_kernels:
+        place in the tree that mutates softmax_mode / act_approx /
+        attn_impl.  ``attention`` overrides the backend's registered
+        attention realisation (the ``compile_model(attention=...)`` knob)."""
+        attn = self.attention if attention is None else attention
+        if attn not in ("xla", "flash_lut"):
+            raise ValueError(f"unknown attention impl {attn!r}; "
+                             "available: xla, flash_lut")
+        kw = dict(softmax_mode=self.softmax_mode, act_approx=self.act_approx,
+                  attn_impl=attn)
+        if self.uses_kernels or attn == "flash_lut":
             kw["kernel_interpret"] = (plan_interpret() if interpret is None
                                       else bool(interpret))
         return cfg.with_(**kw)

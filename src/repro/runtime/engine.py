@@ -138,9 +138,10 @@ class Engine:
 
     @property
     def interpret(self) -> Optional[bool]:
-        """The plan-time Pallas decision (None: backend uses no kernels)."""
-        return self.exec_cfg.kernel_interpret if self.backend.uses_kernels \
-            else None
+        """The plan-time Pallas decision (None: plan uses no kernels)."""
+        uses = self.backend.uses_kernels or \
+            self.exec_cfg.attn_impl == "flash_lut"
+        return self.exec_cfg.kernel_interpret if uses else None
 
     @property
     def rom_bytes(self) -> int:
@@ -161,9 +162,11 @@ class Engine:
             f"/x=2^{self.recipe.input_exponent} {self.recipe.rounding}"
         interp = "" if self.interpret is None else \
             f", pallas={'interpret' if self.interpret else 'mosaic'}"
+        attn = "" if self.exec_cfg.attn_impl == "xla" else \
+            f", attn={self.exec_cfg.attn_impl}"
         return (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
                 f"params {self.param_bytes} B, rom {self.rom_bytes} B{q}"
-                f"{interp}")
+                f"{interp}{attn}")
 
     def _require_kwt(self, what: str):
         if self.exec_cfg.family != "kwt":
@@ -175,7 +178,8 @@ class Engine:
 
 def compile_model(cfg, params, backend="float",
                   recipe: QuantRecipe | None = None,
-                  interpret: bool | None = None) -> Engine:
+                  interpret: bool | None = None,
+                  attention: str | None = None) -> Engine:
     """Plan execution of ``params`` under ``backend``.
 
     ``recipe=None`` -> the backend's default policy: quantising backends
@@ -183,7 +187,11 @@ def compile_model(cfg, params, backend="float",
     the float backend leaves params untouched.  Passing an explicit
     recipe forces PTQ on any backend (e.g. float ops on quantised weights
     — Table IX's middle column).  ``interpret`` overrides the plan-time
-    Pallas interpret/Mosaic auto-decision (tests only).
+    Pallas interpret/Mosaic auto-decision (tests only).  ``attention``
+    overrides the backend's attention realisation: ``"flash_lut"`` routes
+    cacheless attention through the flash-LUT Pallas kernel
+    (``kernels.lut_attention`` — online softmax with the eq-11 ROM),
+    ``"xla"`` keeps the chunked sdpa path.
     """
     be = get_backend(backend)
     if recipe is None and be.quantize:
@@ -193,6 +201,6 @@ def compile_model(cfg, params, backend="float",
         qtree = recipe.quantize(params)
         qbytes = quant.tree_quantized_bytes(qtree)
         params = quant.dequantize_tree(qtree)
-    exec_cfg = be.configure(cfg, interpret=interpret)
+    exec_cfg = be.configure(cfg, interpret=interpret, attention=attention)
     return Engine(cfg=cfg, exec_cfg=exec_cfg, params=params, backend=be,
                   recipe=recipe, quantized_bytes=qbytes)

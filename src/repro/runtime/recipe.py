@@ -6,6 +6,12 @@ rounding rule for the eq-9 cast, optional per-channel exponent refinement,
 and the residual (intermediate) width.  It subsumes the old
 ``launch.serve.quantize_params`` helper — launchers no longer hand-roll
 ``quantize_tree`` + ``dequantize_tree`` call pairs.
+
+It is also the single source of truth for quantiser *semantics*: the QAT
+fake-quant primitives (``repro.qat.fakequant``) call the same
+:func:`po2_fake_quant` this module uses for PTQ, so the values a QAT
+forward pass trains on are bit-identical to the values the deployed
+engine runs — the export-parity contract in ``repro.qat.export``.
 """
 
 from __future__ import annotations
@@ -19,6 +25,57 @@ import jax.numpy as jnp
 from repro.core import quant
 
 Pytree = Any
+
+
+def po2_fake_quant(w: jnp.ndarray, weight_exponent, *, bits: int = 8,
+                   rounding: str = "nearest", per_channel: bool = False):
+    """The eq-9 cast in float: quantise-dequantise without the int8 store.
+
+    Returns ``(fq, q, extra, unsat)``:
+      * ``fq`` — the dequantised float values, bit-identical to
+        ``QuantRecipe.quantize(...)`` -> ``dequantize`` (power-of-2 scales
+        make every (de)scale multiplication exact in f32);
+      * ``q`` — the clipped integer grid (f32 values in [lo, hi]; the
+        exact values ``QuantRecipe.quantize`` casts to int8);
+      * ``extra`` — the per-channel exponent refinements (int32, last-axis
+        channels) or ``None`` on the scalar path;
+      * ``unsat`` — bool mask of lanes whose cast did NOT saturate (the
+        clipped-STE gradient gate used by ``repro.qat.fakequant``).
+
+    ``weight_exponent`` may be a traced value (QAT exponent learning);
+    ``jnp.exp2`` of an integral f32 is exact, so traced and static
+    exponents produce identical values.
+    """
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    wf = w.astype(jnp.float32)
+    e = jnp.asarray(weight_exponent, jnp.float32)
+    extra = None
+    if per_channel and w.ndim >= 2:
+        # Per-channel refinement: each output channel (last axis) shifts to
+        # its own no-saturation bound — extra precision for small channels,
+        # saturation-free casts for large ones, still power-of-2 shifts
+        # only (zero multiplier cost; stored as QTensor.axis_exponents).
+        axes = tuple(range(w.ndim - 1))
+        maxabs = jnp.max(jnp.abs(wf), axis=axes)
+        extra = jnp.floor(jnp.log2(hi / jnp.maximum(maxabs, 1e-30)))
+        extra = jnp.clip(extra - e, -12, 12).astype(jnp.int32)
+        scaled = wf * jnp.exp2(e + extra.astype(jnp.float32))
+    else:
+        scaled = wf * jnp.exp2(e)
+    if rounding == "nearest":
+        q = jnp.floor(scaled + 0.5)
+    elif rounding == "floor":
+        q = jnp.floor(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    unsat = jnp.logical_and(q >= lo, q <= hi)
+    q = jnp.clip(q, lo, hi)
+    # dequantise in the same order QTensor.dequantize uses (both exact)
+    fq = q * jnp.exp2(-e)
+    if extra is not None:
+        fq = fq * jnp.exp2(-extra.astype(jnp.float32))
+    return fq, q, extra, unsat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,55 +103,86 @@ class QuantRecipe:
 
     @classmethod
     def from_config(cls, cfg, **overrides) -> "QuantRecipe":
-        """Build from ``cfg.quant`` (configs.base.QuantConfig) or defaults."""
+        """Build from ``cfg.quant`` (configs.base.QuantConfig) or defaults.
+
+        ``per_channel`` resolves registry-driven: an explicit
+        ``cfg.quant.per_channel`` wins; otherwise LM-scale families default
+        to per-channel refinement (the PR-3 follow-up — one global exponent
+        wastes resolution across a 100k-row embedding), while ``kwt``
+        configs keep the paper's scalar Table V recipe.
+        """
         q = getattr(cfg, "quant", None)
-        kw = {}
+        kw = {"per_channel": cfg.family != "kwt"}
         if q is not None:
-            kw = {"weight_exponent": q.weight_exponent,
-                  "input_exponent": q.input_exponent,
-                  "residual_bits": q.residual_bits}
+            kw.update({"weight_exponent": q.weight_exponent,
+                       "input_exponent": q.input_exponent,
+                       "residual_bits": q.residual_bits})
+            if q.per_channel is not None:
+                kw["per_channel"] = q.per_channel
         kw.update(overrides)
         return cls(**kw)
 
     def with_(self, **kw) -> "QuantRecipe":
         return dataclasses.replace(self, **kw)
 
+    # -- serialisation (QAT export artifacts, BENCH_qat.json) --------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantRecipe":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    # -- calibration --------------------------------------------------------
+
+    def calibrated(self, params: Pytree) -> "QuantRecipe":
+        """Recipe with the analytic no-saturation weight exponent for
+        ``params`` (largest y with no quantised leaf clipping) — the
+        concrete-value counterpart of the QAT exponent-learning loop."""
+        exps = [quant.choose_exponent(leaf, bits=self.bits)
+                for leaf in jax.tree.leaves(params) if self._quantizes(leaf)]
+        if not exps:
+            return self
+        return self.with_(weight_exponent=int(min(exps)))
+
     # -- application -------------------------------------------------------
+
+    def _quantizes(self, leaf) -> bool:
+        """Leaf selection shared with the QAT fake-quant path: norms and
+        biases (rank<=1) stay float per paper §IV."""
+        if not isinstance(leaf, jnp.ndarray) or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return False
+        return not (self.skip_norm_scales and leaf.ndim <= 1)
 
     def _quantize_leaf(self, w: jnp.ndarray) -> quant.QTensor:
         if not self.per_channel or w.ndim < 2:
             return quant.quantize_po2(w, self.weight_exponent, bits=self.bits,
                                       rounding=self.rounding)
-        # Per-channel refinement: each output channel (last axis) shifts to
-        # its own no-saturation bound — extra precision for small channels,
-        # saturation-free casts for large ones, still power-of-2 shifts
-        # only (zero multiplier cost; stored as QTensor.axis_exponents).
-        lo = -(2 ** (self.bits - 1))
-        hi = 2 ** (self.bits - 1) - 1
-        wf = w.astype(jnp.float32)
-        axes = tuple(range(w.ndim - 1))
-        maxabs = jnp.max(jnp.abs(wf), axis=axes)
-        extra = jnp.floor(jnp.log2(hi / jnp.maximum(maxabs, 1e-30)))
-        extra = jnp.clip(extra - self.weight_exponent, -12, 12).astype(jnp.int32)
-        scaled = wf * jnp.exp2((self.weight_exponent + extra).astype(jnp.float32))
-        if self.rounding == "nearest":
-            q = jnp.floor(scaled + 0.5)
-        elif self.rounding == "floor":
-            q = jnp.floor(scaled)
-        else:
-            raise ValueError(f"unknown rounding {self.rounding!r}")
+        _, q, extra, _ = po2_fake_quant(
+            w, self.weight_exponent, bits=self.bits, rounding=self.rounding,
+            per_channel=True)
         dtype = jnp.int8 if self.bits == 8 else jnp.int16
-        return quant.QTensor(values=jnp.clip(q, lo, hi).astype(dtype),
+        return quant.QTensor(values=q.astype(dtype),
                              exponent=self.weight_exponent,
                              axis_exponents=extra)
+
+    def fake_quant_leaf(self, w: jnp.ndarray, weight_exponent=None):
+        """(fq, unsat) for one weight leaf — the QAT forward-pass values.
+        ``weight_exponent`` (possibly traced) overrides the recipe field."""
+        e = self.weight_exponent if weight_exponent is None else weight_exponent
+        fq, _, _, unsat = po2_fake_quant(w, e, bits=self.bits,
+                                         rounding=self.rounding,
+                                         per_channel=self.per_channel and
+                                         w.ndim >= 2)
+        return fq, unsat
 
     def quantize(self, params: Pytree) -> Pytree:
         """params -> tree with QTensor leaves (norms/biases stay float)."""
         def one(leaf):
-            if not isinstance(leaf, jnp.ndarray) or \
-                    not jnp.issubdtype(leaf.dtype, jnp.floating):
-                return leaf
-            if self.skip_norm_scales and leaf.ndim <= 1:
+            if not self._quantizes(leaf):
                 return leaf
             return self._quantize_leaf(leaf)
 

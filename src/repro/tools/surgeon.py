@@ -48,6 +48,19 @@ def shrink_plan(scores, keep: int):
     return [i for i, _ in scores[:len(scores) - keep]]
 
 
+def shrink_params(params, scores, keep: int):
+    """Apply a shrink plan: drop the ``len(blocks) - keep`` lowest-impact
+    blocks and keep the survivors in their original order (residual-stream
+    order matters).  The result is a valid parameter tree for
+    ``cfg.with_(n_layers=keep)`` — the ablation-driven teacher/student
+    initialiser consumed by ``repro.qat.distill``.
+    """
+    drop = set(shrink_plan(scores, keep))
+    blocks = [bp for i, bp in enumerate(params["blocks"]) if i not in drop]
+    assert len(blocks) == keep, (len(blocks), keep)
+    return {**params, "blocks": blocks}
+
+
 def main():
     from repro.configs import registry
     from repro.data import pipeline
@@ -63,6 +76,9 @@ def main():
     for i, d in scores:
         print(f"block {i}: +{d:.5f} loss when ablated")
     print("remove order for depth=1 target:", shrink_plan(scores, keep=1))
+    shrunk = shrink_params(params, scores, keep=1)
+    print(f"shrunk tree: {len(shrunk['blocks'])} block(s), "
+          f"{kwt.count_params(shrunk)} params (from {kwt.count_params(params)})")
 
 
 if __name__ == "__main__":

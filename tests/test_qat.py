@@ -1,0 +1,445 @@
+"""repro.qat: STE fake-quant, QAT train step, distillation, export parity.
+
+The headline contract (the PR's acceptance criterion): the QAT eval-path
+logits are BIT-IDENTICAL to ``runtime.compile_model(cfg, exported_params,
+backend="lut", recipe=exported_recipe)`` — the training loop optimises
+exactly the model the Engine deploys.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import qat, runtime
+from repro.checkpoint import manager
+from repro.configs import registry
+from repro.configs.base import ShapeSpec
+from repro.core import approx
+from repro.data import pipeline
+from repro.launch import steps
+from repro.models import kwt
+from repro.optim import adamw
+from repro.qat import distill as distill_mod
+
+KEY = jax.random.PRNGKey(0)
+CFG = registry.get("kwt-tiny").config
+SHAPE = ShapeSpec("t", CFG.input_dim[1], 16, "train")
+HP = adamw.HParams(lr=1e-3, warmup_steps=2, total_steps=50,
+                   weight_decay=0.0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return kwt.init_params(CFG, KEY)
+
+
+@pytest.fixture(scope="module")
+def recipe():
+    return runtime.QuantRecipe.from_config(CFG)
+
+
+def batch(i, b=16):
+    return pipeline.keyword_batch(0, i, batch=b, input_dim=CFG.input_dim)
+
+
+# ---------------------------------------------------------------------------
+# fakequant: forward parity with the PTQ recipe + STE gradients
+# ---------------------------------------------------------------------------
+
+def test_fake_quant_tree_bit_identical_to_recipe_apply(params, recipe):
+    fq = qat.fake_quant_tree(params, recipe)
+    want = recipe.apply(params)
+    for a, b in zip(jax.tree.leaves(fq), jax.tree.leaves(want)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_fake_quant_per_channel_bit_identical(params, recipe):
+    rc = recipe.with_(per_channel=True)
+    fq = qat.fake_quant_tree(params, rc)
+    want = rc.apply(params)
+    for a, b in zip(jax.tree.leaves(fq), jax.tree.leaves(want)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_fake_quant_skips_norms_and_biases(params, recipe):
+    fq = qat.fake_quant_tree(params, recipe)
+    # rank-1 leaves (biases, cls) stay float and untouched (paper §IV)
+    assert fq["proj_b"] is params["proj_b"]
+    assert fq["cls"] is params["cls"]
+    assert not bool(jnp.array_equal(fq["proj_w"], params["proj_w"]))
+
+
+def test_fake_quant_ste_gradient_is_clipped_identity(recipe):
+    # values: one on-grid, one generic, one far beyond saturation
+    w = jnp.asarray([[0.5, 0.3], [10.0, -10.0]])
+    e = jnp.asarray(6.0)
+
+    g = jax.grad(lambda w: jnp.sum(qat.fake_quant(w, e, recipe)))(w)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.asarray([[1.0, 1.0], [0.0, 0.0]]))
+
+
+def test_exponent_gets_zero_cotangent(recipe):
+    w = jnp.asarray([[0.5, 0.25]])
+    ge = jax.grad(lambda e: jnp.sum(qat.fake_quant(w, e, recipe)))(
+        jnp.asarray(6.0))
+    assert float(ge) == 0.0
+
+
+def test_calibrate_exponent_matches_choose_exponent(params, recipe):
+    from repro.core import quant
+    e = float(qat.calibrate_exponent(params, recipe))
+    want = min(quant.choose_exponent(leaf)
+               for leaf in jax.tree.leaves(params)
+               if recipe._quantizes(leaf))
+    assert e == float(np.clip(want, 0, 14))
+    assert recipe.calibrated(params).weight_exponent == want
+
+
+# ---------------------------------------------------------------------------
+# approx STE: LUT modes usable (and sane) inside jax.grad
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["lut", "lut_fixed"])
+def test_masked_softmax_lut_modes_have_exact_gradient(mode):
+    x = 0.7 * jax.random.normal(jax.random.PRNGKey(2), (4, 9))
+
+    g = jax.grad(lambda v: jnp.sum(
+        approx.masked_softmax(v, None, mode=mode) * v))(x)
+    g_exact = jax.grad(lambda v: jnp.sum(
+        approx.masked_softmax(v, None, mode="exact") * v))(x)
+    # backward is the exact op's vjp; forwards differ (LUT bins), so the
+    # product-rule terms differ only through the forward value
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+    assert float(jnp.max(jnp.abs(g - g_exact))) < 0.1
+
+
+def test_gelu_lut_gradient_close_to_exact():
+    x = jnp.linspace(-3.0, 3.0, 64)
+    g = jax.grad(lambda v: jnp.sum(approx.gelu(v, mode="lut")))(x)
+    ge = jax.grad(lambda v: jnp.sum(approx.gelu(v, mode="exact")))(x)
+    assert bool(jnp.array_equal(g, ge))     # STE: exactly the exact vjp
+
+
+def test_ste_wrapper_preserves_forward_bitwise():
+    x = 0.7 * jax.random.normal(jax.random.PRNGKey(3), (8, 27))
+    direct = approx.softmax_lut(x, fixed=True)
+    wrapped = approx.softmax(x, mode="lut_fixed")
+    assert bool(jnp.array_equal(direct, wrapped))
+
+
+@pytest.mark.parametrize("mode", ["lut", "lut_fixed"])
+def test_masked_softmax_ste_survives_remat_with_traced_mask(mode):
+    """Regression: the mask is built inside the remat'd trace (as in
+    _sdpa_block under cfg.remat) — it must flow through the STE as an
+    operand, not a closure, or the bwd re-run leaks the tracer."""
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(4), (6, 6))
+
+    @jax.remat
+    def f(v):
+        mask = jnp.tril(jnp.ones((6, 6), bool))   # traced-context mask
+        return jnp.sum(approx.masked_softmax(v, mask, mode=mode) * v)
+
+    g = jax.grad(f)(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_lm_qat_train_step_runs_under_remat_scan():
+    """Regression: the LM QAT path (causal mask + cfg.remat + scanned
+    layers + LUT softmax in the loss) crashed with an escaped-tracer
+    error when the STE closed over the mask."""
+    from repro.models import transformer as T
+
+    cfg = registry.get("internlm2-1.8b").smoke
+    lm_shape = ShapeSpec("t", 16, 2, "train")
+    spec = qat.QATSpec(runtime.QuantRecipe.from_config(cfg))
+    step = jax.jit(steps.make_train_step(cfg, lm_shape, HP, n_micro=1,
+                                         qat=spec))
+    p = T.init_params(cfg, KEY)
+    opt = adamw.init(p, HP)
+    qs = qat.init_qat_state(spec)
+    b = pipeline.lm_batch(0, 0, global_batch=2, seq_len=16,
+                          vocab_size=cfg.vocab_size)
+    p, opt, qs, m = step(p, opt, qs, b)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert int(qs["step"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# QAT train step
+# ---------------------------------------------------------------------------
+
+def _run(spec, params, n, start_qstate=None, b=16):
+    step = jax.jit(steps.make_train_step(CFG, SHAPE, HP, n_micro=1,
+                                         qat=spec))
+    opt = adamw.init(params, HP)
+    qs = start_qstate or qat.init_qat_state(spec)
+    losses = []
+    for i in range(n):
+        params, opt, qs, m = step(params, opt, qs, batch(i, b))
+        losses.append(float(m["loss"]))
+    return params, opt, qs, losses
+
+
+def test_qat_step_trains_and_threads_state(params, recipe):
+    spec = qat.QATSpec(recipe)
+    p, _, qs, losses = _run(spec, params, 30, b=64)
+    assert int(qs["step"]) == 30
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_qat_delayed_start_runs_float_forward(params, recipe):
+    """Before start_step the loss forward sees the raw shadow weights."""
+    spec = qat.QATSpec(recipe, qat.QATConfig(start_step=1_000_000))
+    qs = qat.init_qat_state(spec)
+    run = qat.qat_params(params, spec, qs)
+    for a, b in zip(jax.tree.leaves(run), jax.tree.leaves(params)):
+        assert bool(jnp.array_equal(a, b))
+    # and once past start, the fake-quant values
+    qs2 = {**qs, "step": jnp.asarray(0, jnp.int32)}
+    spec2 = qat.QATSpec(recipe, qat.QATConfig(start_step=0))
+    run2 = qat.qat_params(params, spec2, qs2)
+    want = recipe.apply(params)
+    for a, b in zip(jax.tree.leaves(run2), jax.tree.leaves(want)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_qat_exponent_learning_never_freezes_at_zero(params, recipe):
+    """freeze_exponent_step=0 means keep recalibrating (regression: it
+    used to silently disable learning entirely)."""
+    spec = qat.QATSpec(recipe.with_(weight_exponent=3),
+                       qat.QATConfig(learn_exponent=True))
+    _, _, qs, _ = _run(spec, params, 3)
+    # recalibrated away from the recipe value (the old behaviour kept 3.0
+    # forever); the analytic bound for near-init weights is ~6-7
+    assert float(qs["weight_exponent"]) != 3.0
+
+
+def test_qat_exponent_learning_freezes(params, recipe):
+    spec = qat.QATSpec(recipe.with_(weight_exponent=3),
+                       qat.QATConfig(learn_exponent=True,
+                                     freeze_exponent_step=3))
+    _, _, qs, _ = _run(spec, params, 6)
+    learned = float(qs["weight_exponent"])
+    assert learned != 3.0          # recalibrated away from the recipe value
+    # frozen after step 3: rerunning more steps keeps it
+    spec2 = qat.QATSpec(recipe.with_(weight_exponent=3),
+                        qat.QATConfig(learn_exponent=True,
+                                      freeze_exponent_step=3))
+    _, _, qs2, _ = _run(spec2, params, 12)
+    assert float(qs2["weight_exponent"]) == learned
+
+
+def test_qat_composes_with_compressed_grad_sync(params, recipe):
+    from repro.dist import compress
+
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = qat.QATSpec(recipe)
+    step = jax.jit(steps.make_train_step(CFG, SHAPE, HP, n_micro=1,
+                                         sync_mesh=mesh, qat=spec))
+    p = params
+    opt = adamw.init(p, HP)
+    qs = qat.init_qat_state(spec)
+    err = compress.init_error_state(p)
+    for i in range(3):
+        p, opt, qs, err, m = step(p, opt, qs, err, batch(i))
+        assert bool(jnp.isfinite(m["loss"]))
+    assert int(qs["step"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# export: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained(params):
+    spec = qat.QATSpec(runtime.QuantRecipe.from_config(CFG))
+    p, _, qs, _ = _run(spec, params, 20, b=64)
+    return spec, p, qs
+
+
+def test_qat_eval_bit_identical_to_exported_lut_engine(trained):
+    spec, p, qs = trained
+    ex = qat.export(p, spec, qs)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(7), (8, *CFG.input_dim))
+    ev = qat.eval_forward(CFG, spec, ex.recipe)(p, x)
+    eng = runtime.compile_model(CFG, ex.params, backend="lut",
+                                recipe=ex.recipe)
+    assert bool(jnp.array_equal(ev, eng.forward(x))), \
+        "QAT eval path != exported lut engine"
+    # the recipe equals the config default here, so the default-recipe
+    # deployment path is identical too
+    eng2 = runtime.compile_model(CFG, ex.params, backend="lut")
+    assert bool(jnp.array_equal(ev, eng2.forward(x)))
+
+
+def test_export_learned_exponent_round_trips(params):
+    spec = qat.QATSpec(runtime.QuantRecipe.from_config(CFG),
+                       qat.QATConfig(learn_exponent=True,
+                                     freeze_exponent_step=2))
+    p, _, qs, _ = _run(spec, params, 4)
+    ex = qat.export(p, spec, qs)
+    assert ex.recipe.weight_exponent == int(qs["weight_exponent"])
+    # recipe JSON round-trip (the BENCH/export serialisation)
+    rt = runtime.QuantRecipe.from_dict(ex.recipe.to_dict())
+    assert rt == ex.recipe
+
+
+def test_export_bytes_match_engine(trained):
+    spec, p, qs = trained
+    ex = qat.export(p, spec, qs)
+    eng = runtime.compile_model(CFG, ex.params, backend="lut",
+                                recipe=ex.recipe)
+    assert tuple(ex.quantized_bytes) == tuple(eng.quantized_bytes)
+    assert ex.quantized_bytes[0] > 0
+
+
+def test_export_save_writes_artifact(trained, tmp_path):
+    from repro.qat.export import save as export_save
+
+    spec, p, qs = trained
+    ex = qat.export(p, spec, qs)
+    export_save(str(tmp_path / "kwt_tiny_qat"), ex)
+    assert (tmp_path / "kwt_tiny_qat.npz").exists()
+    import json
+    meta = json.loads((tmp_path / "kwt_tiny_qat.json").read_text())
+    assert meta["recipe"]["weight_exponent"] == ex.recipe.weight_exponent
+    assert any(l["kind"] == "qtensor" for l in meta["leaves"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.manager round-trip of the full QAT train state (satellite)
+# ---------------------------------------------------------------------------
+
+def test_qat_train_state_checkpoint_roundtrip_and_resume(params, recipe,
+                                                         tmp_path):
+    """Float shadow weights + opt moments + learned exponent + compressed
+    -grad error state restore bit-exact, and training resumes on the
+    exact trajectory of an uninterrupted run."""
+    from repro.dist import compress
+
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = qat.QATSpec(recipe, qat.QATConfig(learn_exponent=True,
+                                             freeze_exponent_step=4))
+    step = jax.jit(steps.make_train_step(CFG, SHAPE, HP, n_micro=1,
+                                         sync_mesh=mesh,
+                                         sync_per_channel=True, qat=spec))
+
+    def advance(state, i0, n):
+        p, opt, qs, err = state
+        for i in range(i0, i0 + n):
+            p, opt, qs, err, _ = step(p, opt, qs, err, batch(i))
+        return p, opt, qs, err
+
+    init = (params, adamw.init(params, HP), qat.init_qat_state(spec),
+            compress.init_error_state(params))
+    mid = advance(init, 0, 3)
+
+    # save all four trees, restore into fresh zeros-like targets
+    names = ("params", "opt", "qat", "err")
+    for name, tree in zip(names, mid):
+        manager.save(str(tmp_path / name), 3, tree)
+    restored = tuple(
+        manager.restore(str(tmp_path / name), 3,
+                        jax.tree.map(jnp.zeros_like, tree))
+        for name, tree in zip(names, mid))
+    for a, b in zip(jax.tree.leaves(mid), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # deterministic resume: restored trajectory == uninterrupted one
+    end_resumed = advance(restored, 3, 3)
+    end_straight = advance(init, 0, 6)
+    for a, b in zip(jax.tree.leaves(end_resumed),
+                    jax.tree.leaves(end_straight)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# distillation
+# ---------------------------------------------------------------------------
+
+def _tiny_teacher():
+    tcfg = distill_mod.teacher_config(
+        registry.get("kwt-1").config.with_(n_layers=2), CFG)
+    tparams = kwt.init_params(tcfg, jax.random.PRNGKey(9))
+    return tparams, tcfg
+
+
+def test_teacher_config_regrids_input():
+    _, tcfg = _tiny_teacher()
+    assert tcfg.input_dim == CFG.input_dim
+    assert tcfg.d_model == 64 and tcfg.n_classes == 35
+
+
+def test_reduce_head_shapes_and_grouping():
+    tparams, tcfg = _tiny_teacher()
+    red = distill_mod.reduce_head(tparams)
+    assert red["head_w"].shape == (tcfg.d_model, 2)
+    assert red["head_b"].shape == (2,)
+    # default grouping: odd classes pool into the keyword column
+    want_kw = jnp.mean(tparams["head_w"][:, 1::2], axis=-1)
+    np.testing.assert_allclose(np.asarray(red["head_w"][:, 1]),
+                               np.asarray(want_kw), rtol=1e-6)
+    # encoder untouched
+    assert red["blocks"] is tparams["blocks"]
+
+
+def test_fine_grained_surrogate_coarsens_to_binary():
+    """n_classes>2 batches: classes 0/1 coincide with the binary task
+    (variant 0 adds no secondary ridge); binary batches are unchanged."""
+    fine = pipeline.keyword_batch(3, 1, batch=512, input_dim=CFG.input_dim,
+                                  n_classes=35)
+    assert int(fine["labels"].max()) > 1
+    binary = pipeline.keyword_batch(3, 1, batch=512,
+                                    input_dim=CFG.input_dim)
+    # same key derivation -> same noise/jitter draws; samples whose fine
+    # label is in {0, 1} must match the binary construction for that label
+    sel = np.asarray(fine["labels"] < 2)
+    same = np.asarray(fine["labels"]) == np.asarray(binary["labels"])
+    both = sel & same
+    assert both.sum() > 0
+    np.testing.assert_array_equal(np.asarray(fine["mfcc"])[both],
+                                  np.asarray(binary["mfcc"])[both])
+
+
+def test_distill_loss_trains_student(params, recipe):
+    tparams, tcfg = _tiny_teacher()
+    red = distill_mod.reduce_head(tparams)
+    dspec = distill_mod.DistillSpec(red, tcfg.with_(n_classes=2),
+                                    alpha=0.5, temperature=2.0)
+    spec = qat.QATSpec(recipe, qat.QATConfig(), distill=dspec)
+    p, _, qs, losses = _run(spec, params, 10, b=32)
+    assert all(np.isfinite(losses))
+    assert int(qs["step"]) == 10
+    # KD gradient actually reached the student
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params)))
+    assert d > 0
+
+
+def test_surgeon_shrink_params_keeps_highest_impact_blocks():
+    from repro.tools import surgeon
+
+    tcfg = registry.get("kwt-1").config.with_(n_layers=4,
+                                              input_dim=CFG.input_dim,
+                                              patch_dim=(CFG.input_dim[0], 1))
+    tparams = kwt.init_params(tcfg, jax.random.PRNGKey(4))
+    batches = [pipeline.keyword_batch(0, i, batch=16,
+                                      input_dim=tcfg.input_dim,
+                                      n_classes=tcfg.n_classes)
+               for i in range(1)]
+    _, scores = surgeon.ablation_scores(tparams, tcfg, batches, kwt.loss_fn)
+    shrunk = surgeon.shrink_params(tparams, scores, keep=2)
+    assert len(shrunk["blocks"]) == 2
+    kept = [i for i, _ in scores[-2:]]
+    want = [tparams["blocks"][i] for i in sorted(kept)]
+    for a, b in zip(jax.tree.leaves(shrunk["blocks"]),
+                    jax.tree.leaves(want)):
+        assert a is b              # original order, original arrays
+    # shrunk tree runs under the reduced config
+    out = kwt.forward(shrunk, batches[0]["mfcc"], tcfg.with_(n_layers=2))
+    assert out.shape == (16, tcfg.n_classes)

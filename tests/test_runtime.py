@@ -145,6 +145,22 @@ def test_recipe_from_config_reads_quant_config():
     assert r2.weight_exponent == 4
 
 
+def test_recipe_per_channel_registry_defaults():
+    """PR-3 follow-up: LM-scale configs default to per-channel refinement;
+    KWT configs keep the paper's scalar Table V recipe (regression)."""
+    kwt_r = runtime.QuantRecipe.from_config(CFG)
+    assert kwt_r.per_channel is False
+    assert (kwt_r.weight_exponent, kwt_r.input_exponent) == (6, 5)
+    lm = registry.get("internlm2-1.8b").smoke
+    assert runtime.QuantRecipe.from_config(lm).per_channel is True
+    # an explicit QuantConfig.per_channel wins over the family default
+    lm_off = lm.with_(quant=registry.get("kwt-tiny").config.quant.__class__(
+        per_channel=False))
+    assert runtime.QuantRecipe.from_config(lm_off).per_channel is False
+    kwt_on = CFG.with_(quant=CFG.quant.__class__(per_channel=True))
+    assert runtime.QuantRecipe.from_config(kwt_on).per_channel is True
+
+
 def test_recipe_per_channel_reduces_error():
     # channels spanning very different magnitudes: one global power-of-2
     # scale wastes resolution on the small channels
@@ -202,6 +218,68 @@ def test_lm_engine_rejects_kwt_entry_points():
                                backend="float")
     with pytest.raises(NotImplementedError, match="embed_frames"):
         lm.embed_frames(jnp.zeros((1, 2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# flash-LUT attention through the Backend registry (attention= knob)
+# ---------------------------------------------------------------------------
+
+def test_attention_knob_pins_attn_impl(params):
+    eng = runtime.compile_model(CFG, params, backend="lut_float",
+                                attention="flash_lut")
+    assert eng.exec_cfg.attn_impl == "flash_lut"
+    assert eng.interpret is True          # kernel decision made at plan time
+    assert "flash_lut" in eng.describe()
+    # default stays the XLA sdpa path
+    assert runtime.compile_model(CFG, params,
+                                 backend="lut").exec_cfg.attn_impl == "xla"
+    with pytest.raises(ValueError, match="flash_lut"):
+        runtime.compile_model(CFG, params, attention="tpu_v7")
+
+
+def test_flash_lut_layers_path_matches_direct_ops_call(params):
+    """Parity with the direct kernels.ops.lut_attention path: the routed
+    attention layer is the kernel verbatim (bit-identical)."""
+    from repro.models import layers as L
+
+    eng = runtime.compile_model(CFG, params, backend="lut_float",
+                                attention="flash_lut")
+    cfg, p = eng.exec_cfg, eng.params
+    bp = p["blocks"][0]["attn"]
+    emb = kwt.embed_frames(p, jnp.swapaxes(
+        0.5 * jax.random.normal(jax.random.PRNGKey(11),
+                                (2, *CFG.input_dim)), 1, 2), cfg)
+    b = emb.shape[0]
+    cls = jnp.broadcast_to(p["cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, emb], axis=1) + p["pos"]
+    routed, _ = L.apply_attention(bp, x, cfg,
+                                  positions=jnp.arange(x.shape[1]),
+                                  causal=False)
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = (jnp.einsum("bsd,df->bsf", x, bp["wq"]) + bp["bq"]).reshape(
+        b, -1, h, dh)
+    k = (jnp.einsum("bsd,df->bsf", x, bp["wk"]) + bp["bk"]).reshape(
+        b, -1, h, dh)
+    v = (jnp.einsum("bsd,df->bsf", x, bp["wv"]) + bp["bv"]).reshape(
+        b, -1, h, dh)
+    o = ops.lut_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), causal=False,
+                          interpret=True)
+    direct = jnp.einsum("bsf,fd->bsd",
+                        jnp.swapaxes(o, 1, 2).reshape(b, -1, h * dh),
+                        bp["wo"]) + bp["bo"]
+    assert bool(jnp.array_equal(routed, direct.astype(routed.dtype)))
+
+
+def test_flash_lut_engine_close_to_sdpa_lut(params, mfcc):
+    """Whole-model sanity: online-softmax (flash) vs the jnp float-LUT
+    softmax differ only in rescale order — logits stay within a tight
+    tolerance of the sdpa lut_float engine."""
+    flash = runtime.compile_model(CFG, params, backend="lut_float",
+                                  attention="flash_lut").forward(mfcc)
+    sdpa = runtime.compile_model(CFG, params,
+                                 backend="lut_float").forward(mfcc)
+    assert float(jnp.max(jnp.abs(flash - sdpa))) < 1e-4
 
 
 # ---------------------------------------------------------------------------
