@@ -97,18 +97,22 @@ def bench_qat(out_path="BENCH_qat.json", *, float_steps=300, qat_steps=200,
     ok_qat = ok_kd = True
     for wexp in exponents:
         recipe = runtime.QuantRecipe.from_config(cfg, weight_exponent=wexp)
-        rb = runtime.compile_model(cfg, fparams, backend="lut",
-                                   recipe=recipe).rom_bytes
-        int8_bytes = recipe.quantized_bytes(fparams)[0]
+        eng = runtime.compile_model(cfg, fparams, backend="lut",
+                                    recipe=recipe)
+        # packed_rom_bytes: the TRUE packed weight image (Engine.rom_bytes
+        # since the integer-resident-QTensor PR); lut_bytes: the 2.69 kB
+        # LUT bank that rom_bytes used to report.
+        packed_rom = eng.rom_bytes
+        lut_bytes = eng.lut_bytes
 
         def row(name, acc):
             variants.append({
                 "name": name, "weight_exponent": wexp,
-                "accuracy": round(acc, 4), "rom_bytes": rb,
-                "int8_bytes": int8_bytes,
+                "accuracy": round(acc, 4),
+                "packed_rom_bytes": packed_rom, "lut_bytes": lut_bytes,
                 "recipe": recipe.to_dict()})
             print(f"w=2^{wexp} {name:7s}: {acc:.3f}  "
-                  f"(rom {rb} B, int8 {int8_bytes} B)")
+                  f"(rom {packed_rom} B, lut {lut_bytes} B)")
 
         acc_ptq = test(recipe.apply(fparams))
         row("ptq", acc_ptq)

@@ -50,7 +50,11 @@ def bench_kernels():
 def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
                         batch: int = 64, reps: int = 20) -> dict:
     """Per-backend forward latency of the Engine the launchers actually
-    serve (runtime.compile_model on KWT-Tiny), emitted as JSON."""
+    serve (runtime.compile_model on KWT-Tiny), emitted as JSON.
+
+    ``packed_rom_bytes`` is the TRUE packed integer weight image
+    (``Engine.rom_bytes``: int8, or nibble-packed int4 for the extra
+    ``lut@int4`` row); ``lut_bytes`` the 2.69 kB LUT bank."""
     from repro import runtime
     from repro.configs import registry
     from repro.models import kwt
@@ -59,21 +63,30 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     params = kwt.init_params(cfg, jax.random.PRNGKey(0))
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1),
                                 (batch, *cfg.input_dim))
+    plans = [(name, None) for name in runtime.available_backends()]
+    plans.append(("lut", runtime.QuantRecipe.from_config(
+        cfg, bits=4).calibrated(params)))          # the int4 storage row
     results = []
-    for name in runtime.available_backends():
-        eng = runtime.compile_model(cfg, params, backend=name)
+    for name, recipe in plans:
+        eng = runtime.compile_model(cfg, params, backend=name, recipe=recipe)
         jax.block_until_ready(eng.forward(x))        # compile + warm
         t0 = time.perf_counter()
         for _ in range(reps):
             outp = eng.forward(x)
         jax.block_until_ready(outp)
         us = (time.perf_counter() - t0) / reps * 1e6
-        row = {"backend": name, "us_per_forward": round(us, 1),
+        bits = eng.recipe.bits if eng.recipe is not None else None
+        label = name if recipe is None else f"{name}@int{bits}"
+        row = {"backend": label, "us_per_forward": round(us, 1),
                "batch": batch, "interpret": eng.interpret,
-               "rom_bytes": eng.rom_bytes, "param_bytes": eng.param_bytes}
+               "packed_rom_bytes": eng.rom_bytes,
+               "lut_bytes": eng.lut_bytes,
+               "param_bytes": eng.param_bytes,
+               "int_resident": eng.int_resident, "bits": bits}
         results.append(row)
-        print(f"backend_{name},{us:.1f},rom={eng.rom_bytes}B;"
-              f"params={eng.param_bytes}B;interpret={eng.interpret}")
+        print(f"backend_{label},{us:.1f},rom={eng.rom_bytes}B;"
+              f"lut={eng.lut_bytes}B;params={eng.param_bytes}B;"
+              f"interpret={eng.interpret}")
     report = {"arch": "kwt-tiny", "batch": batch, "reps": reps,
               "device": jax.default_backend(), "results": results}
     with open(out_path, "w") as f:

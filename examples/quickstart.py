@@ -76,9 +76,9 @@ def main():
     eng_q = runtime.compile_model(cfg, params, backend="float",
                                   recipe=runtime.QuantRecipe.from_config(cfg))
     acc_q = accuracy(eng_q, args.eval_n)
-    qbytes, _ = eng_q.quantized_bytes
     print(f"[2] int8 PTQ (w=2^6, Table V):   {acc_q:.3f}  "
-          f"({qbytes} int8 bytes — paper: 1.646 kB)")
+          f"({eng_q.rom_bytes} packed int8 ROM bytes — paper: 1.65 kB "
+          "incl. its int8 rank-1 params)")
 
     # stage 3: the accelerated path under the selected backend
     eng_h = runtime.compile_model(cfg, params, backend=args.backend)

@@ -21,7 +21,7 @@ def main():
     print("== float path ==")
     serve.main(base)
     print("== quantised + LUT path (paper §IV+§VI) ==")
-    serve.main(base + ["--quantize"])
+    serve.main(base + ["--backend", "lut_float"])
 
 
 if __name__ == "__main__":

@@ -99,6 +99,10 @@ def main():
     ap.add_argument("--distill-alpha", type=float, default=0.5)
     ap.add_argument("--distill-temp", type=float, default=2.0)
     ap.add_argument("--qat-backend", default="lut")
+    ap.add_argument("--bits", type=int, default=8, choices=(4, 8),
+                    help="stored weight width: 8 -> int8, 4 -> nibble-"
+                         "packed int4 (half the ROM; exponent calibrated "
+                         "to the 4-bit no-saturation bound)")
     ap.add_argument("--check-backends", action="store_true",
                     help="run the exported params across the full backend "
                          "matrix (float/lut_float/lut/pallas)")
@@ -123,9 +127,14 @@ def main():
 
     # [2] PTQ (the old pipeline's deployment) under the same backend the
     # QAT loss will train through (explicit recipe: PTQ even on backends
-    # that don't quantise by default)
+    # that don't quantise by default).  Sub-8-bit recipes calibrate the
+    # weight exponent to the analytic no-saturation bound — Table V's 2^6
+    # saturates nearly everything at a 4-bit grid.
+    recipe = runtime.QuantRecipe.from_config(cfg, bits=args.bits)
+    if args.bits < 8:
+        recipe = recipe.calibrated(fparams)
     eng_ptq = runtime.compile_model(cfg, fparams, backend=args.qat_backend,
-                                    recipe=runtime.QuantRecipe.from_config(cfg))
+                                    recipe=recipe)
     acc_ptq = accuracy(eng_ptq, args.eval_n)
     print(f"[2] PTQ  {eng_ptq.describe()}")
     print(f"    accuracy:                  {acc_ptq:.3f}")
@@ -134,7 +143,7 @@ def main():
     # on a validation fold — step 0 IS the PTQ model, so the selected
     # export never regresses below PTQ on the selection fold
     spec = qat.QATSpec(
-        runtime.QuantRecipe.from_config(cfg),
+        recipe,
         qat.QATConfig(backend=args.qat_backend),
         distill=make_distill_spec(cfg, args) if args.distill else None)
     qparams, qstate = qat.finetune_qat(
@@ -172,9 +181,24 @@ def main():
                   f"{accuracy(eng, args.eval_n):.3f}  ({eng.describe()})")
 
     if args.export_path:
+        from repro.qat.export import load as export_load
         from repro.qat.export import save as export_save
         export_save(args.export_path, ex)
-        print(f"    wrote {args.export_path}.npz / .json")
+        print(f"    wrote {args.export_path}.npz / .json "
+              f"({ex.quantized_bytes[0]} packed int{args.bits} bytes)")
+        # the packed artifact round-trips and deploys with no float
+        # detour: loaded QTensor tree -> Engine, logits bit-identical
+        lrecipe, lqparams = export_load(args.export_path, ex.qparams)
+        eng_loaded = runtime.compile_model(cfg, lqparams,
+                                           backend=args.qat_backend,
+                                           recipe=lrecipe)
+        if not bool(jnp.array_equal(eng_loaded.forward(x),
+                                    eng_qat.forward(x))):
+            print("FAIL: reloaded packed artifact != exported engine",
+                  file=sys.stderr)
+            return 1
+        print("    reloaded packed artifact BIT-IDENTICAL to the "
+              "exported engine")
 
     # smoke contract: the selected QAT export must not regress below PTQ
     # (selection fold guarantees >=; allow test-fold sampling noise)

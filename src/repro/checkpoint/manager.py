@@ -11,6 +11,13 @@ corrupts the restore path (restore picks the newest *complete* step).
 Restore is resharding-aware: arrays are loaded host-side and device_put
 against the *current* mesh's NamedShardings, so a job may restart on a
 different mesh shape (elastic restart, tested in tests/test_checkpoint.py).
+
+Packed quantised trees (``core.quant.QTensor`` leaves — int8 bodies,
+nibble-packed uint8 at ``bits<=4``, int8 axis exponents) round-trip
+WITHOUT upcasting: leaves are written at their stored dtypes and the
+static exponent/bits/logical_shape metadata rides the pytree structure
+of the restore target, so a checkpointed export artifact is byte-for-byte
+the flashable ROM image (tests/test_train_infra.py).
 """
 
 from __future__ import annotations

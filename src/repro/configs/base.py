@@ -19,6 +19,7 @@ class QuantConfig:
     enabled: bool = True
     weight_exponent: int = 6      # Table V best row: weights 2^6
     input_exponent: int = 5       # Table V best row: inputs 2^5
+    bits: int = 8                 # stored weight width; <=4 nibble-packs
     residual_bits: int = 16       # paper: INT16 intermediates
     softmax_mode: str = "lut"     # "exact" | "lut" | "lut_fixed"
     act_mode: str = "lut"         # LUT GELU / SiLU

@@ -40,13 +40,16 @@ def sweep_scale_factors(
     input_exponents: tuple[int, ...] = (3, 4, 5, 6),
     pairs: list[tuple[int, int]] | None = None,
     rounding: str = "nearest",
+    bits: int = 8,
 ) -> list[SweepResult]:
     """Reproduce Table V: accuracy per (weight 2^y, input 2^y) pair.
 
     ``apply_fn(params, x) -> logits``.  Batches are (x, labels).
     The paper sweeps (8,8), (16,16), (32,32), (64,32), (64,64); pass those
     via ``pairs`` as exponents [(3,3),(4,4),(5,5),(6,5),(6,6)].
-    ``rounding="floor"`` sweeps with the bit-exact eq-9 cast.
+    ``rounding="floor"`` sweeps with the bit-exact eq-9 cast; ``bits``
+    selects the stored width (``SweepResult.quantized_bytes`` then reports
+    the TRUE packed bytes — nibble-packed at 4 bits).
     """
     if pairs is None:
         pairs = [(w, i) for w in weight_exponents for i in input_exponents]
@@ -54,7 +57,7 @@ def sweep_scale_factors(
     results = []
     for wexp, iexp in pairs:
         qparams = quant.quantize_tree(params, weight_exponent=wexp,
-                                      rounding=rounding)
+                                      rounding=rounding, bits=bits)
         fparams = quant.dequantize_tree(qparams)
         qbytes, _ = quant.tree_quantized_bytes(qparams)
         correct = total = 0

@@ -23,6 +23,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -30,22 +31,135 @@ INT8_MIN, INT8_MAX = -128, 127
 INT16_MIN, INT16_MAX = -(2**15), 2**15 - 1
 
 
+def int_range(bits: int) -> tuple[int, int]:
+    """The two's-complement range of a ``bits``-wide signed integer."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def storage_dtype(bits: int):
+    """Narrowest container dtype for ``bits``-wide values.
+
+    ``bits<=4`` values are *stored* nibble-packed (two per uint8 byte, see
+    :func:`pack_po2`); their element dtype before packing is int8.
+    """
+    return jnp.int8 if bits <= 8 else jnp.int16
+
+
+# ---------------------------------------------------------------------------
+# The packed-int codec.  ONE implementation shared by Engine weights
+# (integer-resident QTensors), QAT export artifacts (qat/export.py),
+# compressed gradient payloads (dist/compress.py) and checkpoints.
+# ---------------------------------------------------------------------------
+
+def packed_length(n: int, bits: int) -> int:
+    """Stored bytes for ``n`` values at ``bits`` width (nibble packing)."""
+    return (n + 1) // 2 if bits <= 4 else n
+
+
+def pack_po2(values: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack ``bits<=4`` two's-complement values, two nibbles per byte.
+
+    ``values`` is any int array whose elements fit the ``bits``-wide range;
+    the result is a flat uint8 array of ``ceil(n/2)`` bytes (low nibble =
+    even index).  Odd lengths pad the final high nibble with zero; empty
+    tensors pack to an empty byte string.  Exact inverse: :func:`unpack_po2`
+    with the original shape — integers in, integers out, no float detour.
+    """
+    assert 1 <= bits <= 4, f"pack_po2 is the sub-byte codec (bits={bits})"
+    flat = values.reshape(-1).astype(jnp.uint8)        # two's-complement wrap
+    if flat.size % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.uint8)])
+    pairs = flat.reshape(-1, 2)
+    return ((pairs[:, 0] & 0xF) | ((pairs[:, 1] & 0xF) << 4)).astype(jnp.uint8)
+
+
+def unpack_po2(packed: jnp.ndarray, bits: int, shape) -> jnp.ndarray:
+    """Inverse of :func:`pack_po2`: nibble-packed bytes -> int8 ``shape``.
+
+    Sign-extends each 4-bit two's-complement nibble ((v ^ 8) - 8), so the
+    round-trip is exact for every value in the ``bits``-wide range.
+    """
+    assert 1 <= bits <= 4, f"unpack_po2 is the sub-byte codec (bits={bits})"
+    n = int(np.prod(shape, dtype=np.int64))
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    flat = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+    return ((flat.astype(jnp.int8) ^ 8) - 8).reshape(shape)
+
+
+def pack_payload(values: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Storage form of an int tensor: nibble-packed for ``bits<=4``, the
+    narrowest int dtype otherwise (the codec entry point non-QTensor
+    callers — dist/compress payloads, export writers — share)."""
+    if bits <= 4:
+        return pack_po2(values, bits)
+    return values.astype(storage_dtype(bits))
+
+
+def unpack_payload(payload: jnp.ndarray, bits: int, shape) -> jnp.ndarray:
+    """Inverse of :func:`pack_payload` (identity above 4 bits)."""
+    if bits <= 4:
+        return unpack_po2(payload, bits, shape)
+    return payload.reshape(shape)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class QTensor:
-    """An eq-9 quantised tensor: int values + static power-of-2 exponent."""
+    """An eq-9 quantised tensor: int values + static power-of-2 exponent.
 
-    values: jnp.ndarray                                   # int8 / int16
+    Storage is dtype-true (the bytes a 64 kB device would hold): int8 for
+    ``4 < bits <= 8``, int16 above, and nibble-packed uint8 (two values
+    per byte, :func:`pack_po2`) for ``bits <= 4``.  When packed,
+    ``logical_shape`` carries the pre-pack shape and ``values`` is the
+    flat byte image; :meth:`int_values` restores the int8 grid (inside
+    jit too — unpacking is pure bit arithmetic).
+    """
+
+    values: jnp.ndarray               # int8 / int16, or uint8 nibble-packed
     exponent: int = dataclasses.field(metadata=dict(static=True))
-    axis_exponents: jnp.ndarray | None = None             # per-channel (beyond-paper)
+    axis_exponents: jnp.ndarray | None = None    # per-channel (beyond-paper)
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+    logical_shape: tuple | None = dataclasses.field(
+        default=None, metadata=dict(static=True))    # set iff nibble-packed
+
+    @classmethod
+    def store(cls, q: jnp.ndarray, exponent: int, *, bits: int = 8,
+              axis_exponents: jnp.ndarray | None = None) -> "QTensor":
+        """Build a dtype-true QTensor from an (already clipped) int grid."""
+        qi = q.astype(storage_dtype(bits))     # signed cast BEFORE nibble wrap
+        if bits <= 4:
+            return cls(values=pack_po2(qi, bits), exponent=exponent,
+                       axis_exponents=axis_exponents, bits=bits,
+                       logical_shape=tuple(qi.shape))
+        return cls(values=qi, exponent=exponent,
+                   axis_exponents=axis_exponents, bits=bits)
+
+    @property
+    def packed(self) -> bool:
+        return self.logical_shape is not None
 
     @property
     def shape(self):
-        return self.values.shape
+        return self.logical_shape if self.packed else self.values.shape
+
+    @property
+    def stored_bytes(self) -> int:
+        """True packed storage bytes (values + per-channel exponents)."""
+        b = self.values.size * self.values.dtype.itemsize
+        if self.axis_exponents is not None:
+            b += self.axis_exponents.size * self.axis_exponents.dtype.itemsize
+        return b
+
+    def int_values(self) -> jnp.ndarray:
+        """The integer grid at its logical shape (unpacks when packed)."""
+        if self.packed:
+            return unpack_po2(self.values, self.bits, self.logical_shape)
+        return self.values
 
     def dequantize(self) -> jnp.ndarray:
         scale = jnp.float32(2.0 ** (-self.exponent))
-        out = self.values.astype(jnp.float32) * scale
+        out = self.int_values().astype(jnp.float32) * scale
         if self.axis_exponents is not None:
             out = out * jnp.exp2(-self.axis_exponents.astype(jnp.float32))
         return out
@@ -54,14 +168,18 @@ class QTensor:
 def quantize_po2(w: jnp.ndarray, exponent: int, *, bits: int = 8,
                  stochastic_key: jax.Array | None = None,
                  rounding: str = "floor") -> QTensor:
-    """eq 9: floor(w * 2^y) with saturation to the int range.
+    """eq 9: floor(w * 2^y) with saturation to the ``bits``-wide int range.
 
     ``rounding="nearest"`` adds the half-LSB offset before the floor (an
     adder in front of the truncating shift in hardware terms): floor's
     systematic -LSB/2 bias is correlated across every weight and measurably
     shifts whole-model logits; the offset removes it at zero ROM cost.
+
+    Storage is the narrowest dtype for ``bits`` (int8 up to 8 bits,
+    nibble-packed below 5 — no silent int16 widening), and saturation
+    clips at the true ``bits``-wide edges (e.g. [-8, 7] at 4 bits).
     """
-    lo, hi = (INT8_MIN, INT8_MAX) if bits == 8 else (INT16_MIN, INT16_MAX)
+    lo, hi = int_range(bits)
     scaled = w.astype(jnp.float32) * (2.0 ** exponent)
     if rounding not in ("floor", "nearest"):
         raise ValueError(f"unknown rounding {rounding!r}")
@@ -72,8 +190,7 @@ def quantize_po2(w: jnp.ndarray, exponent: int, *, bits: int = 8,
         q = jnp.floor(scaled + 0.5)
     else:
         q = jnp.floor(scaled)
-    dtype = jnp.int8 if bits == 8 else jnp.int16
-    return QTensor(values=jnp.clip(q, lo, hi).astype(dtype), exponent=exponent)
+    return QTensor.store(jnp.clip(q, lo, hi), exponent, bits=bits)
 
 
 def choose_exponent(w: jnp.ndarray, *, bits: int = 8) -> int:
@@ -98,9 +215,10 @@ def qmatmul(x: QTensor, w: QTensor, *, out_exponent: int | None = None,
     shifted to ``out_exponent`` and clipped to the residual width (paper:
     INT16 intermediates).
     """
+    xv, wv = x.int_values(), w.int_values()
     acc = jax.lax.dot_general(
-        x.values, w.values,
-        dimension_numbers=(((x.values.ndim - 1,), (0,)), ((), ())),
+        xv, wv,
+        dimension_numbers=(((xv.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
     acc_exp = x.exponent + w.exponent
     out_exponent = acc_exp if out_exponent is None else out_exponent
@@ -109,7 +227,47 @@ def qmatmul(x: QTensor, w: QTensor, *, out_exponent: int | None = None,
         else (acc >> shift if shift >= 0 else acc << (-shift))
     lo, hi = (INT16_MIN, INT16_MAX) if residual_bits == 16 else (-(2**31), 2**31 - 1)
     dtype = jnp.int16 if residual_bits == 16 else jnp.int32
-    return QTensor(values=jnp.clip(acc, lo, hi).astype(dtype), exponent=out_exponent)
+    return QTensor(values=jnp.clip(acc, lo, hi).astype(dtype),
+                   exponent=out_exponent, bits=residual_bits)
+
+
+def resident_values(w: QTensor) -> jnp.ndarray:
+    """In-jit float view of a stored-integer leaf, fusion-isolated.
+
+    Unpacks the nibble/int8 grid and applies the power-of-2 de-scale —
+    both exact, so the VALUES equal the plan-time dequantisation bit for
+    bit — behind an ``optimization_barrier`` that keeps the quantiser ops
+    out of the model's fusion regions (the PR-2 lesson).  Note the
+    whole-program caveat: merely compiling quantiser ops into the same
+    XLA module can re-tile unrelated reductions (LayerNorm/softmax) on
+    CPU, so the runtime Engine's bit-identity contract additionally runs
+    the unpack as its own executable (``Engine.live_params``); this
+    in-jit path serves direct model calls on packed trees, where
+    value-exactness (not cross-program bit-identity) is the contract.
+    """
+    return jax.lax.optimization_barrier(w.dequantize())
+
+
+def qt_einsum(eq: str, x: jnp.ndarray, w: QTensor) -> jnp.ndarray:
+    """Einsum against a *stored-integer* QTensor weight (integer-resident
+    linear layers — the Engine's lut/pallas weight path).
+
+    The weight bytes the jitted program closes over stay int8 /
+    nibble-packed int4; the float view is materialised per call by
+    :func:`resident_values` (exact unpack + po2 de-scale, fusion-isolated),
+    so logits are **bit-identical** to the dequantise-first float-matmul
+    path while storage is dtype-true end to end.
+
+    Integer activations (a QTensor ``x``) are the full-integer pipeline:
+    route those through ``kernels.ops.int8_matmul`` (the Pallas
+    int8 x int8 -> int32 kernel over the same stored operands) or
+    :func:`qmatmul`; this helper is the float-activation contract.
+    """
+    if isinstance(x, QTensor):
+        raise TypeError("qt_einsum is the float-activation path; integer "
+                        "activations go through kernels.ops.int8_matmul / "
+                        "quant.qmatmul on the same stored operands")
+    return jnp.einsum(eq, x, resident_values(w))
 
 
 def dequantize_tree(tree: Pytree) -> Pytree:
@@ -141,12 +299,18 @@ def quantize_tree(params: Pytree, *, weight_exponent: int = 6,
 
 
 def tree_quantized_bytes(tree: Pytree) -> tuple[int, int]:
-    """(quantised_bytes, float_bytes) of a (partially) quantised tree."""
+    """(quantised_bytes, float_bytes) of a (partially) quantised tree.
+
+    ``quantised_bytes`` is the TRUE packed storage count — nibble-packed
+    bytes for ``bits<=4`` leaves plus any per-channel exponent bytes —
+    i.e. the integer image a device would actually flash, not a
+    dtype-derived fiction.
+    """
     qb = fb = 0
     for leaf in jax.tree.leaves(
             tree, is_leaf=lambda x: isinstance(x, QTensor)):
         if isinstance(leaf, QTensor):
-            qb += leaf.values.size * leaf.values.dtype.itemsize
+            qb += leaf.stored_bytes
         elif isinstance(leaf, jnp.ndarray):
             fb += leaf.size * leaf.dtype.itemsize
     return qb, fb

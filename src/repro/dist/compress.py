@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import quant
+
 
 def reduce_axis(mesh) -> str:
     """The slow axis the compressed sync rings over: 'pod' when present
@@ -43,25 +45,28 @@ def reduce_axis(mesh) -> str:
     return mesh.axis_names[0]
 
 
-def quantize_leaf(g, per_channel: bool = False):
-    """Symmetric int8: values in [-127, 127] + f32 scale(s).
+def quantize_leaf(g, per_channel: bool = False, *, bits: int = 8):
+    """Symmetric ``bits``-wide payload: values in ±(2^(bits-1)-1) + f32
+    scale(s), stored through the shared ``core.quant`` codec (int8 body at
+    8 bits, nibble-packed uint8 — half the wire bytes — at ``bits<=4``).
 
     ``per_channel=True`` gives rank>=2 leaves one scale per leading-axis
     channel (rows of a [d_out, ...] gradient differ by orders of magnitude
     across fan-ins; a per-tensor scale crushes the small rows to zero).
     Rank<=1 leaves (biases, norm scales) always use the per-tensor scale —
     per-element scales would just re-encode the tensor.  The payload grows
-    by one f32 per channel: negligible next to the int8 body.
+    by one f32 per channel: negligible next to the int body.
     """
+    hi = float(2 ** (bits - 1) - 1)
     g32 = g.astype(jnp.float32)
     if per_channel and g32.ndim >= 2:
         axes = tuple(range(1, g32.ndim))
-        scale = jnp.maximum(jnp.max(jnp.abs(g32), axis=axes), 1e-30) / 127.0
+        scale = jnp.maximum(jnp.max(jnp.abs(g32), axis=axes), 1e-30) / hi
     else:
-        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / hi
     q = jnp.clip(jnp.round(g32 / _expand(scale, g32.ndim)),
-                 -127.0, 127.0).astype(jnp.int8)
-    return q, scale
+                 -hi, hi).astype(quant.storage_dtype(bits))
+    return quant.pack_payload(q, bits), scale
 
 
 def _expand(scale, ndim: int):
@@ -71,8 +76,15 @@ def _expand(scale, ndim: int):
     return s.reshape(s.shape + (1,) * (ndim - s.ndim))
 
 
-def dequantize_leaf(q, scale):
-    return q.astype(jnp.float32) * _expand(scale, q.ndim)
+def dequantize_leaf(q, scale, *, bits: int = 8, shape=None):
+    """Invert :func:`quantize_leaf`: unpack the wire payload through the
+    shared codec (``shape`` is the logical leaf shape, required when the
+    payload is nibble-packed) and re-apply the scale."""
+    assert bits > 4 or shape is not None, \
+        "nibble-packed payloads need the logical shape (q.shape is the " \
+        "packed byte count)"
+    vals = quant.unpack_payload(q, bits, q.shape if shape is None else shape)
+    return vals.astype(jnp.float32) * _expand(scale, vals.ndim)
 
 
 def init_error_state(grads):
@@ -80,31 +92,34 @@ def init_error_state(grads):
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
-def _ring_mean(q, scale, axis, n):
+def _ring_mean(q, scale, axis, n, *, bits: int = 8, shape=None):
     """Gather-ring all-reduce of one quantised leaf: dequantise + f32
     accumulate locally at every hop (re-quantising partial sums each hop
-    would compound error; moving the original shards does not)."""
-    acc = dequantize_leaf(q, scale)
+    would compound error; moving the original shards does not).  The wire
+    payload stays in its packed codec form across every ppermute hop."""
+    acc = dequantize_leaf(q, scale, bits=bits, shape=shape)
     if n == 1:
         return acc
     perm = [(i, (i + 1) % n) for i in range(n)]
     for _ in range(n - 1):
         q = jax.lax.ppermute(q, axis, perm)
         scale = jax.lax.ppermute(scale, axis, perm)
-        acc = acc + dequantize_leaf(q, scale)
+        acc = acc + dequantize_leaf(q, scale, bits=bits, shape=shape)
     return acc / n
 
 
 def compressed_grad_sync(grads, err, mesh, axis=None,
-                         per_channel: bool = False):
-    """Ring-mean ``grads`` over the mesh's slow axis with int8 payloads.
+                         per_channel: bool = False, *, bits: int = 8):
+    """Ring-mean ``grads`` over the mesh's slow axis with packed payloads.
 
     Returns ``(synced, new_err)``: the dequantised ring mean (same tree /
     dtypes as ``grads``) and the updated error-feedback state.  ``err``
     comes from :func:`init_error_state` on step 0 and is threaded through
     subsequent calls.  ``per_channel`` switches the payload to one scale
-    per leading-axis channel (see :func:`quantize_leaf`); the error-
-    feedback conservation identity holds either way.
+    per leading-axis channel (see :func:`quantize_leaf`); ``bits`` selects
+    the wire width — 4 moves nibble-packed bytes (half the int8 wire)
+    through the same ``core.quant`` codec the Engine stores weights with.
+    The error-feedback conservation identity holds for every combination.
     """
     axis = axis or reduce_axis(mesh)
     n = mesh.shape[axis]
@@ -117,9 +132,11 @@ def compressed_grad_sync(grads, err, mesh, axis=None,
         synced, new_err = [], []
         for g, e in zip(gs, es):
             c = g.astype(jnp.float32) + e
-            q, scale = quantize_leaf(c, per_channel=per_channel)
-            new_err.append(c - dequantize_leaf(q, scale))
-            synced.append(_ring_mean(q, scale, axis, n).astype(g.dtype))
+            q, scale = quantize_leaf(c, per_channel=per_channel, bits=bits)
+            new_err.append(c - dequantize_leaf(q, scale, bits=bits,
+                                               shape=g.shape))
+            synced.append(_ring_mean(q, scale, axis, n, bits=bits,
+                                     shape=g.shape).astype(g.dtype))
         return tuple(synced), tuple(new_err)
 
     fn = jax.shard_map(local, mesh=mesh, in_specs=(P(), P()),

@@ -105,11 +105,36 @@ def lut_softmax(x: jnp.ndarray, *, fixed: bool = True,
     return out[:m0].reshape(shape)
 
 
-def int8_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray, *, x_exp: int,
-                w_exp: int, out_exp: int | None = None,
+def int8_matmul(x_int, w_int, *, x_exp: int | None = None,
+                w_exp: int | None = None, out_exp: int | None = None,
                 residual_bits: int = 32,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """Quantised matmul -> dequantised f32 (contract matches ref.int8_matmul)."""
+    """Quantised matmul -> dequantised f32 (contract matches ref.int8_matmul).
+
+    Operands may be raw int arrays (+ explicit exponents) or stored
+    ``quant.QTensor``s — int8 or nibble-packed int4 — whose exponents and
+    per-channel refinements are read off the container: the full-integer
+    pipeline runs the Pallas int8 x int8 -> int32 kernel directly on the
+    bytes the Engine keeps resident.
+    """
+    from repro.core import quant as _q
+
+    w_axis = None
+    if isinstance(x_int, _q.QTensor):
+        if x_int.axis_exponents is not None:
+            # x's axis_exponents scale its LAST axis — the contraction
+            # axis here — which cannot fold into a post-matmul rescale.
+            raise NotImplementedError(
+                "per-channel axis_exponents on the activation operand "
+                "vary along the contraction axis; dequantise x instead")
+        x_exp = x_int.exponent if x_exp is None else x_exp
+        x_int = x_int.int_values()
+    if isinstance(w_int, _q.QTensor):
+        w_exp = w_int.exponent if w_exp is None else w_exp
+        w_axis = w_int.axis_exponents
+        w_int = w_int.int_values()
+    assert x_exp is not None and w_exp is not None, \
+        "raw int operands need explicit x_exp/w_exp"
     m, k = x_int.shape
     k2, n = w_int.shape
     xp, _ = pad_to_block(x_int, 0, 8)
@@ -122,7 +147,10 @@ def int8_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray, *, x_exp: int,
     out = _mm.int8_matmul_raw(
         xp, wp, shift=acc_exp - out_exp, out_int16=(residual_bits == 16),
         block_m=bm, interpret=_auto_interpret(interpret))
-    return out[:m, :n].astype(jnp.float32) * (2.0 ** (-out_exp))
+    out = out[:m, :n].astype(jnp.float32) * (2.0 ** (-out_exp))
+    if w_axis is not None:
+        out = out * jnp.exp2(-w_axis.astype(jnp.float32))
+    return out
 
 
 def lut_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -41,16 +41,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--backend", default="float",
                     choices=runtime.available_backends(),
-                    help="execution backend (runtime.compile_model)")
-    ap.add_argument("--quantize", action="store_true",
-                    help="deprecated alias for --backend lut_float "
-                         "(the pre-runtime --quantize numerics)")
+                    help="execution backend (runtime.compile_model); "
+                         "the former --quantize flag is --backend lut_float")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.quantize and args.backend != "float":
-        ap.error("--quantize is a deprecated alias for --backend lut_float; "
-                 "pass only --backend")
-    backend = "lut_float" if args.quantize else args.backend
+    backend = args.backend
 
     entry = registry.get(args.arch)
     cfg = entry.smoke if args.smoke else entry.config

@@ -160,18 +160,21 @@ def _loss(cfg):
 
 
 def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
-                    sync_mesh=None, sync_per_channel=False, qat=None):
+                    sync_mesh=None, sync_per_channel=False, sync_bits=8,
+                    qat=None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     Gradient accumulation over ``n_micro`` microbatches via lax.scan;
     grads are averaged in f32, then one AdamW update.
 
-    ``sync_mesh`` enables int8 error-feedback gradient compression on the
+    ``sync_mesh`` enables error-feedback gradient compression on the
     mesh's slow axis (``dist.compress.compressed_grad_sync``; the ROADMAP
     follow-up from the repro.dist PR): the step then threads the residual
     state — ``(params, opt_state, err, batch) -> (params, opt_state, err,
     metrics)`` with ``err`` from ``compress.init_error_state``.
-    ``sync_per_channel`` selects per-channel payload scales.
+    ``sync_per_channel`` selects per-channel payload scales; ``sync_bits``
+    the wire width (4 -> nibble-packed payloads via the shared
+    ``core.quant`` codec, half the int8 wire bytes).
 
     ``qat`` (a ``repro.qat.train.QATSpec``) switches the step to
     quantisation-aware training: the loss forward runs eq-9 fake-quant
@@ -185,7 +188,7 @@ def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
         from repro.qat import train as qat_train
         return qat_train.make_qat_train_step(
             cfg, shape, hp=hp, n_micro=n_micro, sync_mesh=sync_mesh,
-            sync_per_channel=sync_per_channel, qat=qat)
+            sync_per_channel=sync_per_channel, sync_bits=sync_bits, qat=qat)
     hp = hp or hparams_for(cfg)
     n_micro = n_micro or microbatches(cfg, shape)
     loss_fn = _loss(cfg)
@@ -230,7 +233,8 @@ def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
     def train_step_synced(params, opt_state, err, batch):
         loss, grads = compute_grads(params, batch)
         grads, err = compress.compressed_grad_sync(
-            grads, err, sync_mesh, per_channel=sync_per_channel)
+            grads, err, sync_mesh, per_channel=sync_per_channel,
+            bits=sync_bits)
         new_params, new_opt, metrics = finish(loss, grads, opt_state, params)
         return new_params, new_opt, err, metrics
 

@@ -79,18 +79,13 @@ def main(argv=None):
                     help="hops ingested per engine step")
     ap.add_argument("--backend", default="float",
                     choices=runtime.available_backends(),
-                    help="execution backend (runtime.compile_model)")
-    ap.add_argument("--quantize", action="store_true",
-                    help="deprecated alias for --backend lut_float "
-                         "(the pre-runtime --quantize numerics)")
+                    help="execution backend (runtime.compile_model); "
+                         "the former --quantize flag is --backend lut_float")
     ap.add_argument("--train-steps", type=int, default=80,
                     help="0 = serve a randomly initialised model")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.quantize and args.backend != "float":
-        ap.error("--quantize is a deprecated alias for --backend lut_float; "
-                 "pass only --backend")
-    backend = "lut_float" if args.quantize else args.backend
+    backend = args.backend
 
     entry = registry.get(args.arch)
     base_cfg = entry.smoke
@@ -99,12 +94,15 @@ def main(argv=None):
     dcfg = det.DetectorConfig()
     mesh = meshlib.make_host_mesh()
 
-    # training always runs the float path; the engine then owns PTQ +
-    # mode selection for serving (the old --quantize flag plumbing).
+    # training always runs the float path; the engine then owns PTQ + mode
+    # selection for serving.  The fused server hop closes over the engine's
+    # LIVE float view (integer-resident plans store packed QTensors; the
+    # per-plan unpack runs once here), keeping the joint jit's model graph
+    # identical to Engine.forward's — the bit-identity contract.
     fparams = train_params(base_cfg, fcfg, args.train_steps, args.seed)
     eng = runtime.compile_model(base_cfg, fparams, backend=backend)
     print(eng.describe())
-    cfg, params = eng.exec_cfg, eng.params
+    cfg, params = eng.exec_cfg, eng.live_params()
 
     B, k = args.slots, args.chunk_hops
     chunk_samples = k * fcfg.hop_len

@@ -74,6 +74,10 @@ def main(argv=None):
                          "slow axis (dist.compress)")
     ap.add_argument("--per-channel-scales", action="store_true",
                     help="per-channel payload scales for --compressed-grads")
+    ap.add_argument("--grad-bits", type=int, default=8, choices=(4, 8),
+                    help="wire width for --compressed-grads payloads "
+                         "(4: nibble-packed via the shared core.quant "
+                         "codec, half the int8 wire bytes)")
     ap.add_argument("--qat", action="store_true",
                     help="quantisation-aware training: the loss forward "
                          "runs eq-9 fake-quant params under --qat-backend's "
@@ -203,6 +207,7 @@ def main(argv=None):
             steps.make_train_step(cfg, shape, hp, n_micro=1,
                                   sync_mesh=sync_mesh,
                                   sync_per_channel=args.per_channel_scales,
+                                  sync_bits=args.grad_bits,
                                   qat=qat_spec),
             donate_argnums=(0, 1))
 
@@ -265,7 +270,7 @@ def main(argv=None):
     if qat_spec is not None:
         from repro import qat as qat_mod
         ex = qat_mod.export(params, qat_spec, qstate)
-        print(f"[qat] exported recipe: {ex.recipe}; int8 bytes "
+        print(f"[qat] exported recipe: {ex.recipe}; packed int bytes "
               f"{ex.quantized_bytes[0]} + float {ex.quantized_bytes[1]}")
     print("training complete.")
     return params

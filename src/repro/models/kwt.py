@@ -68,7 +68,7 @@ def embed_frames(params, frames, cfg):
     batch, keeping the streaming path bit-identical to offline.
     """
     x = frames.astype(jnp.dtype(cfg.dtype))
-    return jnp.einsum("btf,fd->btd", x, params["proj_w"]) + params["proj_b"]
+    return L.linear(x, params["proj_w"], "btf,fd->btd") + params["proj_b"]
 
 
 def encode_window(params, x, cfg):
@@ -76,7 +76,10 @@ def encode_window(params, x, cfg):
     positions + post-norm blocks + head (paper §II eqs 1-6, 8)."""
     b = x.shape[0]
     cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
-    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    # pos is a rank-2 leaf, so quantising recipes store it as a QTensor;
+    # it is consumed additively, so integer-resident trees dequantise it
+    # in-jit (same po2 de-scale the plan-time dequant would have applied).
+    x = jnp.concatenate([cls, x], axis=1) + L.asfloat(params["pos"])
     for bp in params["blocks"]:
         # post-norm residual blocks (paper §II eqs 1-6), full attention
         a, _ = L.apply_attention(bp["attn"], x, cfg,
@@ -85,7 +88,7 @@ def encode_window(params, x, cfg):
         x = L.apply_norm(bp["ln1"], x + a, cfg)
         f = L.apply_mlp(bp["mlp"], x, cfg)
         x = L.apply_norm(bp["ln2"], x + f, cfg)
-    return (jnp.einsum("bd,dc->bc", x[:, 0], params["head_w"])
+    return (L.linear(x[:, 0], params["head_w"], "bd,dc->bc")
             + params["head_b"]).astype(jnp.float32)
 
 

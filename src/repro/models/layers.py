@@ -15,10 +15,32 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import approx
+from repro.core import quant
 
 # Mesh axis conventions (see launch/mesh.py):
 FSDP = "data"     # parameter shard axis (ZeRO-3 style)
 TP = "model"      # tensor-parallel axis
+
+
+def linear(x, w, eq: str):
+    """One linear layer, weight either float or a stored-integer QTensor.
+
+    Integer-resident engines (runtime backends ``lut``/``pallas``) hand
+    the model a tree whose matmul weights are int8 / nibble-packed int4
+    QTensors; ``quant.qt_einsum`` materialises the exact float view per
+    call (unpack + po2 de-scale behind a fusion barrier) — bit-identical
+    logits on every backend while the weight bytes inside the jitted
+    program stay packed.
+    """
+    if isinstance(w, quant.QTensor):
+        return quant.qt_einsum(eq, x, w)
+    return jnp.einsum(eq, x, w)
+
+
+def asfloat(w):
+    """Dequantise a QTensor consumed outside a matmul (e.g. additive
+    positional embeddings); floats pass through untouched."""
+    return quant.resident_values(w) if isinstance(w, quant.QTensor) else w
 
 
 def fsdp_axis(cfg):
@@ -229,9 +251,9 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
     """
     b, sq, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
-    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
-    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    q = linear(x, p["wq"], "bsd,df->bsf")
+    k = linear(x, p["wk"], "bsd,df->bsf")
+    v = linear(x, p["wv"], "bsd,df->bsf")
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, sq, h, dh)
@@ -277,7 +299,7 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
                    _q8_vec_decode(cv, cvs, x.dtype), cfg, q_offset=q_off,
                    kv_len_valid=valid, causal=causal)
         new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs}
-        out = jnp.einsum("bsf,fd->bsd", out.reshape(b, sq, h * dh), p["wo"])
+        out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd")
         if "bo" in p:
             out = out + p["bo"]
         return out.astype(x.dtype), new_cache
@@ -297,7 +319,7 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
         out = sdpa(q, ck_use, cv_use, cfg, q_offset=q_off,
                    kv_len_valid=valid, causal=causal)
         new_cache = {"k": ck, "v": cv}
-    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, sq, h * dh), p["wo"])
+    out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd")
     if "bo" in p:
         out = out + p["bo"]
     return out.astype(x.dtype), new_cache
@@ -393,15 +415,15 @@ def apply_mlp(p, x, cfg):
     act = approx.activation(cfg.activation, cfg.act_approx,
                             interpret=cfg.kernel_interpret)
     if cfg.gated_mlp:
-        gate = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
-        up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
-        return jnp.einsum("bsf,fd->bsd", (gate * up).astype(x.dtype),
-                          p["w_down"]).astype(x.dtype)
-    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+        gate = act(linear(x, p["w_gate"], "bsd,df->bsf"))
+        up = linear(x, p["w_up"], "bsd,df->bsf")
+        return linear((gate * up).astype(x.dtype), p["w_down"],
+                      "bsf,fd->bsd").astype(x.dtype)
+    h = linear(x, p["w1"], "bsd,df->bsf")
     if "b1" in p:
         h = h + p["b1"]
     h = act(h).astype(x.dtype)
-    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    out = linear(h, p["w2"], "bsf,fd->bsd")
     if "b2" in p:
         out = out + p["b2"]
     return out.astype(x.dtype)

@@ -92,7 +92,14 @@ def eval_forward(cfg, spec: QATSpec, recipe: QuantRecipe | None = None):
 
 
 def save(path: str, ex: QATExport) -> None:
-    """Write the deploy artifact: recipe JSON + int8/float leaves (npz)."""
+    """Write the deploy artifact: recipe JSON + packed int/float leaves.
+
+    QTensor leaves are written in their STORED form — int8, or the
+    nibble-packed uint8 bytes of the shared ``core.quant`` codec for
+    ``bits<=4`` recipes — so the .npz is byte-for-byte the ROM image a
+    device would flash (``quantized_bytes[0]`` of payload, no float or
+    int16 detour).  :func:`load` reverses it exactly.
+    """
     import numpy as np
 
     leaves = jax.tree.leaves(
@@ -102,6 +109,8 @@ def save(path: str, ex: QATExport) -> None:
         if isinstance(leaf, quant.QTensor):
             arrays[f"leaf_{i}_values"] = np.asarray(leaf.values)
             meta.append({"kind": "qtensor", "exponent": leaf.exponent,
+                         "bits": leaf.bits,
+                         "shape": list(leaf.shape),
                          "per_channel": leaf.axis_exponents is not None})
             if leaf.axis_exponents is not None:
                 arrays[f"leaf_{i}_axis_exponents"] = np.asarray(
@@ -113,3 +122,36 @@ def save(path: str, ex: QATExport) -> None:
     with open(path + ".json", "w") as f:
         json.dump({"recipe": ex.recipe.to_dict(), "leaves": meta,
                    "quantized_bytes": list(ex.quantized_bytes)}, f, indent=2)
+
+
+def load(path: str, like: Pytree) -> tuple[QuantRecipe, Pytree]:
+    """Read a saved artifact back into a packed QTensor tree.
+
+    ``like`` supplies the tree STRUCTURE (e.g. ``kwt.init_params`` or the
+    export-time ``qparams``); leaf payloads come from disk in their packed
+    form and round-trip exactly — feed the result straight to
+    ``runtime.compile_model(cfg, qparams, backend=...)`` (pre-quantised
+    trees deploy as-is, no float detour).
+    """
+    import numpy as np
+
+    with open(path + ".json") as f:
+        doc = json.load(f)
+    data = np.load(path + ".npz")
+    recipe = QuantRecipe.from_dict(doc["recipe"])
+    leaves, meta = [], doc["leaves"]
+    for i, m in enumerate(meta):
+        values = jnp.asarray(data[f"leaf_{i}_values"])
+        if m["kind"] == "qtensor":
+            axis = jnp.asarray(data[f"leaf_{i}_axis_exponents"]) \
+                if m["per_channel"] else None
+            bits = m.get("bits", 8)
+            leaves.append(quant.QTensor(
+                values=values, exponent=int(m["exponent"]),
+                axis_exponents=axis, bits=bits,
+                logical_shape=tuple(m["shape"]) if bits <= 4 else None))
+        else:
+            leaves.append(values)
+    treedef = jax.tree.structure(
+        like, is_leaf=lambda x: isinstance(x, quant.QTensor))
+    return recipe, jax.tree.unflatten(treedef, leaves)

@@ -128,7 +128,8 @@ def next_exponent(params: Pytree, spec: QATSpec, qstate: dict) -> jnp.ndarray:
 
 
 def make_qat_train_step(cfg, shape, hp=None, n_micro=None, sync_mesh=None,
-                        sync_per_channel=False, *, qat: QATSpec):
+                        sync_per_channel=False, sync_bits=8, *,
+                        qat: QATSpec):
     """The QAT reading of ``steps.make_train_step`` (which delegates here).
 
     Per step: (1) resolve this step's weight exponent (learning /
@@ -200,7 +201,8 @@ def make_qat_train_step(cfg, shape, hp=None, n_micro=None, sync_mesh=None,
         active = qstate["step"] >= qat.config.start_step
         loss, grads = compute_grads(params, batch, e, active)
         grads, err = compress.compressed_grad_sync(
-            grads, err, sync_mesh, per_channel=sync_per_channel)
+            grads, err, sync_mesh, per_channel=sync_per_channel,
+            bits=sync_bits)
         new_params, new_opt, new_q, metrics = finish(
             loss, grads, opt_state, params, qstate, e, active)
         return new_params, new_opt, new_q, err, metrics

@@ -30,9 +30,14 @@ class Backend:
     """One execution policy.
 
     ``quantize``: apply the QuantRecipe PTQ to params by default.
-    ``uses_lut``: the 2.69 kB ROM bank is live (Engine.rom_bytes > 0).
+    ``uses_lut``: the 2.69 kB ROM bank is live (Engine.lut_bytes > 0).
     ``uses_kernels``: softmax/GELU execute as Pallas kernels; the config
     gets ``kernel_interpret`` pinned to the plan-time decision.
+    ``int_resident``: the Engine keeps the quantised weights in their
+    stored integer form (int8 / nibble-packed int4 QTensors) and linear
+    layers apply the power-of-2 de-scale in the matmul epilogue
+    (``quant.qt_einsum``) — logits bit-identical to dequantise-first,
+    weight bytes in the jitted program packed.
     """
 
     name: str
@@ -42,6 +47,7 @@ class Backend:
     quantize: bool = False
     uses_lut: bool = False
     uses_kernels: bool = False
+    int_resident: bool = False
     attention: str = "xla"         # xla | flash_lut (kernels.lut_attention)
 
     def configure(self, cfg, *, interpret: bool | None = None,
@@ -95,12 +101,15 @@ register_backend(Backend(
     softmax_mode="lut", act_approx="lut", quantize=True, uses_lut=True))
 
 register_backend(Backend(
-    "lut", "jnp Q8.24 LUT reference: fixed-point softmax + LUT GELU, PTQ "
-           "params (the '+Hardware' path, Table IX column 4)",
-    softmax_mode="lut_fixed", act_approx="lut", quantize=True, uses_lut=True))
+    "lut", "jnp Q8.24 LUT reference: fixed-point softmax + LUT GELU, "
+           "integer-resident PTQ params (the '+Hardware' path, Table IX "
+           "column 4)",
+    softmax_mode="lut_fixed", act_approx="lut", quantize=True, uses_lut=True,
+    int_resident=True))
 
 register_backend(Backend(
     "pallas", "Pallas kernels for softmax/GELU (interpret on CPU, compiled "
-              "Mosaic on TPU — decided at plan time), PTQ params",
+              "Mosaic on TPU — decided at plan time), integer-resident PTQ "
+              "params",
     softmax_mode="pallas", act_approx="pallas", quantize=True, uses_lut=True,
-    uses_kernels=True))
+    uses_kernels=True, int_resident=True))

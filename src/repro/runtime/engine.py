@@ -60,7 +60,10 @@ class Engine:
     act_approx / kernel_interpret different from the user's ``cfg`` —
     drivers that build their own fused jits (e.g. the streaming server's
     joint engine+detector hop) close over ``eng.exec_cfg`` and pass
-    ``eng.params``, so execution policy still has a single source.
+    ``eng.live_params()`` (NOT ``eng.params``: integer-resident plans
+    store packed QTensors there, and dequantising inside the driver's
+    own XLA module would forfeit the bit-identity contract — see
+    :meth:`live_params`), so execution policy still has a single source.
     """
 
     cfg: Any                        # the config compile_model was given
@@ -76,27 +79,47 @@ class Engine:
         self._forward = jax.jit(lambda p, x: self._mod.forward(p, x, cfg))
         self._embed = self._encode = self._prefill = self._decode = None
         self._stream_steps = {}
+        self._unpack = jax.jit(quant.dequantize_tree) \
+            if self.int_resident else None
         if cfg.family == "kwt":
             self._embed = jax.jit(
                 lambda p, fr: self._mod.embed_frames(p, fr, cfg))
             self._encode = jax.jit(
                 lambda p, w: self._mod.encode_window(p, w, cfg))
 
+    def live_params(self):
+        """The float operand tree the model executables run on.
+
+        Integer-resident plans store packed int8 / nibble-packed int4
+        QTensors in ``params``; the float view is materialised per call
+        by a separate jitted unpack program — the software analogue of
+        the device's shift-dequantiser stage (ROM bytes stay packed, the
+        float image is a transient).  Keeping the unpack in its OWN
+        executable is load-bearing for the bit-identity contract: when
+        quantiser ops share the model's XLA module, CPU fusion re-tiles
+        unrelated reductions (LayerNorm/softmax) and rounding becomes
+        weight-producer-dependent; as a separate stage the model
+        executable is byte-identical to the dequantise-first plan and
+        receives bit-identical operand values (po2 de-scales are exact).
+        """
+        return self.params if self._unpack is None else \
+            self._unpack(self.params)
+
     # -- inference entry points (all jitted, params passed as operands) ----
 
     def forward(self, x):
         """Offline forward: kwt mfcc [B,F,T] -> logits; LM tokens -> logits."""
-        return self._forward(self.params, x)
+        return self._forward(self.live_params(), x)
 
     def embed_frames(self, frames):
         """[B, t, F] time-major frames -> [B, t, d] patch embeddings."""
         self._require_kwt("embed_frames")
-        return self._embed(self.params, frames)
+        return self._embed(self.live_params(), frames)
 
     def encode_window(self, window):
         """Assembled [B, T, d] window -> logits [B, n_classes]."""
         self._require_kwt("encode_window")
-        return self._encode(self.params, window)
+        return self._encode(self.live_params(), window)
 
     def stream_step(self, state, chunk, fcfg):
         """One hop of incremental inference (stream.engine.stream_step under
@@ -109,7 +132,7 @@ class Engine:
             step = jax.jit(lambda p, s, c: stream_engine.stream_step(
                 p, s, c, cfg, fcfg))
             self._stream_steps[fcfg] = step
-        return step(self.params, state, chunk)
+        return step(self.live_params(), state, chunk)
 
     # -- LM serving entry points ------------------------------------------
 
@@ -121,14 +144,14 @@ class Engine:
             cfg = self.exec_cfg
             self._prefill = jax.jit(
                 lambda p, t, s: self._mod.prefill(p, t, cfg, s))
-        return self._prefill(self.params, tokens, state)
+        return self._prefill(self.live_params(), tokens, state)
 
     def decode_step(self, token, state):
         if self._decode is None:
             cfg = self.exec_cfg
             self._decode = jax.jit(
                 lambda p, t, s: self._mod.decode_step(p, t, cfg, s))
-        return self._decode(self.params, token, state)
+        return self._decode(self.live_params(), token, state)
 
     # -- introspection -----------------------------------------------------
 
@@ -145,28 +168,48 @@ class Engine:
 
     @property
     def rom_bytes(self) -> int:
+        """TRUE packed bytes of the integer weight image the plan deploys
+        (nibble-packed below 5 bits; 0 when nothing is quantised).
+
+        KWT-Tiny at the paper recipe: 1512 B of int8 weight ROM — the
+        paper's 1.65 kB figure counts its 146 rank-1 params (biases,
+        norm scales) at int8 too, which we keep float per §IV.  A 4-bit
+        recipe halves this (±nibble padding).
+        """
+        return self.quantized_bytes[0] if self.quantized_bytes else 0
+
+    @property
+    def lut_bytes(self) -> int:
         """LUT ROM footprint of the plan (paper: 2.69 kB; 0 for float)."""
         return lutlib.make_lut_bank().rom_bytes if self.backend.uses_lut else 0
 
     @property
     def param_bytes(self) -> int:
-        """Deployed parameter bytes: int8 + residual-float when quantised,
-        plain float tree bytes otherwise."""
+        """Deployed parameter bytes: packed ints + residual floats when
+        quantised, plain float tree bytes otherwise."""
         if self.quantized_bytes is not None:
             return sum(self.quantized_bytes)
         return _tree_bytes(self.params)
 
+    @property
+    def int_resident(self) -> bool:
+        """True when the Engine's live tree holds stored-integer QTensors
+        (the lut/pallas weight path) rather than a dequantised float copy."""
+        return _has_qtensors(self.params)
+
     def describe(self) -> str:
         q = "" if self.recipe is None else \
             f", w=2^{self.recipe.weight_exponent}" \
-            f"/x=2^{self.recipe.input_exponent} {self.recipe.rounding}"
+            f"/x=2^{self.recipe.input_exponent} " \
+            f"int{self.recipe.bits} {self.recipe.rounding}" + \
+            (" resident" if self.int_resident else "")
         interp = "" if self.interpret is None else \
             f", pallas={'interpret' if self.interpret else 'mosaic'}"
         attn = "" if self.exec_cfg.attn_impl == "xla" else \
             f", attn={self.exec_cfg.attn_impl}"
         return (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
-                f"params {self.param_bytes} B, rom {self.rom_bytes} B{q}"
-                f"{interp}{attn}")
+                f"params {self.param_bytes} B, rom {self.rom_bytes} B, "
+                f"lut {self.lut_bytes} B{q}{interp}{attn}")
 
     def _require_kwt(self, what: str):
         if self.exec_cfg.family != "kwt":
@@ -176,31 +219,69 @@ class Engine:
                 f"decode_step")
 
 
+def _has_qtensors(tree) -> bool:
+    return any(isinstance(leaf, quant.QTensor) for leaf in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, quant.QTensor)))
+
+
+def _recipe_from_tree(cfg, tree) -> QuantRecipe:
+    """Reconstruct the deployment recipe of an already-quantised tree from
+    its own QTensor metadata (bits / exponent / per-channel), so
+    ``Engine.recipe`` and ``describe()`` report the artifact's actual
+    policy rather than the config default.  Rounding is storage-
+    irrelevant post-quantisation and keeps the config default."""
+    qleaves = [leaf for leaf in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, quant.QTensor))
+        if isinstance(leaf, quant.QTensor)]
+    return QuantRecipe.from_config(
+        cfg, bits=qleaves[0].bits,
+        weight_exponent=min(q.exponent for q in qleaves),
+        per_channel=any(q.axis_exponents is not None for q in qleaves))
+
+
 def compile_model(cfg, params, backend="float",
                   recipe: QuantRecipe | None = None,
                   interpret: bool | None = None,
-                  attention: str | None = None) -> Engine:
+                  attention: str | None = None,
+                  integer_resident: bool | None = None) -> Engine:
     """Plan execution of ``params`` under ``backend``.
 
     ``recipe=None`` -> the backend's default policy: quantising backends
     (lut_float / lut / pallas) derive a QuantRecipe from ``cfg.quant``;
     the float backend leaves params untouched.  Passing an explicit
     recipe forces PTQ on any backend (e.g. float ops on quantised weights
-    — Table IX's middle column).  ``interpret`` overrides the plan-time
-    Pallas interpret/Mosaic auto-decision (tests only).  ``attention``
-    overrides the backend's attention realisation: ``"flash_lut"`` routes
-    cacheless attention through the flash-LUT Pallas kernel
-    (``kernels.lut_attention`` — online softmax with the eq-11 ROM),
-    ``"xla"`` keeps the chunked sdpa path.
+    — Table IX's middle column).  ``params`` may also be an
+    already-quantised QTensor tree (a packed QAT export artifact): it is
+    deployed as-is, no float detour and no re-quantisation.
+
+    ``integer_resident`` overrides the backend's weight-residency policy
+    (default: ``lut``/``pallas`` keep the stored int8 / nibble-packed
+    int4 QTensors live inside the jitted program and de-scale in the
+    matmul epilogue — bit-identical logits, packed weight bytes; other
+    backends deploy the dequantised float copy).  Integer residency
+    currently covers the ``kwt`` family (the paper model whose layers
+    consume QTensors); LM-scale families fall back to dequantise-first.
+
+    ``interpret`` overrides the plan-time Pallas interpret/Mosaic
+    auto-decision (tests only).  ``attention`` overrides the backend's
+    attention realisation: ``"flash_lut"`` routes cacheless attention
+    through the flash-LUT Pallas kernel (``kernels.lut_attention`` —
+    online softmax with the eq-11 ROM), ``"xla"`` keeps the chunked sdpa
+    path.
     """
     be = get_backend(backend)
-    if recipe is None and be.quantize:
+    pre_quantized = _has_qtensors(params)
+    if recipe is None and pre_quantized:
+        recipe = _recipe_from_tree(cfg, params)
+    elif recipe is None and be.quantize:
         recipe = QuantRecipe.from_config(cfg)
     qbytes = None
-    if recipe is not None:
-        qtree = recipe.quantize(params)
+    if recipe is not None or pre_quantized:
+        qtree = params if pre_quantized else recipe.quantize(params)
         qbytes = quant.tree_quantized_bytes(qtree)
-        params = quant.dequantize_tree(qtree)
+        resident = (be.int_resident and cfg.family == "kwt"
+                    if integer_resident is None else bool(integer_resident))
+        params = qtree if resident else quant.dequantize_tree(qtree)
     exec_cfg = be.configure(cfg, interpret=interpret, attention=attention)
     return Engine(cfg=cfg, exec_cfg=exec_cfg, params=params, backend=be,
                   recipe=recipe, quantized_bytes=qbytes)

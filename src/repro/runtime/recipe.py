@@ -116,7 +116,8 @@ class QuantRecipe:
         if q is not None:
             kw.update({"weight_exponent": q.weight_exponent,
                        "input_exponent": q.input_exponent,
-                       "residual_bits": q.residual_bits})
+                       "residual_bits": q.residual_bits,
+                       "bits": getattr(q, "bits", 8)})
             if q.per_channel is not None:
                 kw["per_channel"] = q.per_channel
         kw.update(overrides)
@@ -164,10 +165,11 @@ class QuantRecipe:
         _, q, extra, _ = po2_fake_quant(
             w, self.weight_exponent, bits=self.bits, rounding=self.rounding,
             per_channel=True)
-        dtype = jnp.int8 if self.bits == 8 else jnp.int16
-        return quant.QTensor(values=q.astype(dtype),
-                             exponent=self.weight_exponent,
-                             axis_exponents=extra)
+        # dtype-true storage through the shared codec (nibble-packed below
+        # 5 bits); per-channel refinements are clipped to [-12, 12] so one
+        # int8 per output channel stores them exactly.
+        return quant.QTensor.store(q, self.weight_exponent, bits=self.bits,
+                                   axis_exponents=extra.astype(jnp.int8))
 
     def fake_quant_leaf(self, w: jnp.ndarray, weight_exponent=None):
         """(fq, unsat) for one weight leaf — the QAT forward-pass values.

@@ -115,3 +115,41 @@ def test_per_channel_sync_conservation():
     for k in grads:
         assert float(jnp.max(jnp.abs(
             synced[k] + err1[k] - grads[k]))) < 1e-7
+
+
+# --- int4 wire payloads through the shared core.quant codec ----------------
+
+def test_int4_payload_packs_and_roundtrips():
+    """bits=4 payloads are nibble-packed uint8 (HALF the int8 wire bytes,
+    odd sizes padded) and invert exactly through the shared codec."""
+    g = jax.random.normal(KEY, (31, 3)) * 0.2         # odd element count
+    q8, _ = compress.quantize_leaf(g)
+    q4, s4 = compress.quantize_leaf(g, bits=4)
+    assert q8.dtype == jnp.int8 and q8.size == g.size
+    assert q4.dtype == jnp.uint8 and q4.size == (g.size + 1) // 2
+    back = compress.dequantize_leaf(q4, s4, bits=4, shape=g.shape)
+    assert back.shape == g.shape
+    # round-to-nearest at 4 bits: error <= scale/2 = max|g| / 14
+    assert float(jnp.max(jnp.abs(back - g))) <= 0.5 * float(s4) + 1e-7
+
+
+def test_int4_sync_conservation_and_error_bound():
+    """The conservation identity is payload-width-independent; the one-step
+    relative error grows to the 4-bit bound but no further."""
+    mesh = jax.make_mesh((1,), ("data",))
+    grads = {"w": jax.random.normal(KEY, (33, 17)) * 0.3,   # odd sizes
+             "b": jax.random.normal(KEY, (7,))}
+    err = compress.init_error_state(grads)
+    synced, err1 = compress.compressed_grad_sync(grads, err, mesh, bits=4)
+    for k in grads:
+        assert float(jnp.max(jnp.abs(
+            synced[k] + err1[k] - grads[k]))) < 1e-7
+        rel = float(jnp.max(jnp.abs(synced[k] - grads[k]))) \
+            / float(jnp.max(jnp.abs(grads[k])))
+        assert rel <= 0.5 / 7 + 1e-6                   # half-LSB of ±7 grid
+    # per-channel composes with the packed payload
+    synced_c, err_c = compress.compressed_grad_sync(
+        grads, err, mesh, per_channel=True, bits=4)
+    for k in grads:
+        assert float(jnp.max(jnp.abs(
+            synced_c[k] + err_c[k] - grads[k]))) < 1e-7

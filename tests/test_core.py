@@ -162,6 +162,99 @@ def test_choose_exponent_no_overflow():
     assert int(jnp.max(jnp.abs(q2.values.astype(jnp.int32)))) >= 127
 
 
+def test_quantize_po2_narrowest_dtype_and_saturation_edges():
+    """Regression: bits<8 no longer widens to int16 — storage is the
+    narrowest dtype (int8 up to 8 bits, nibble-packed below 5) and the
+    cast saturates at the true bits-wide edges ±(2^(bits-1)-1) / -2^(b-1)."""
+    w = jnp.asarray([[1e7, -1e7], [0.9, -0.9]])
+    for bits, dtype, packed in ((8, jnp.int8, False), (6, jnp.int8, False),
+                                (5, jnp.int8, False), (4, jnp.uint8, True),
+                                (2, jnp.uint8, True), (16, jnp.int16, False)):
+        q = quant.quantize_po2(w, 0, bits=bits)
+        assert q.values.dtype == dtype, bits
+        assert q.packed is packed and q.shape == (2, 2)
+        lo, hi = quant.int_range(bits)
+        vals = q.int_values()
+        assert int(vals.max()) == hi and int(vals.min()) == lo, bits
+    # the positive edge is reachable exactly (no off-by-one at +hi)
+    q4 = quant.quantize_po2(jnp.asarray([7.0, -8.0, 7.4, -8.6]), 0, bits=4)
+    assert [int(v) for v in q4.int_values()] == [7, -8, 7, -8]
+
+
+@given(st.integers(0, 33), st.integers(2, 4), st.integers(0, 10**6))
+def test_pack_po2_roundtrip_property(n, bits, seed):
+    """Codec property: exact int round-trip on odd lengths and empties,
+    with the packed byte count always ceil(n/2)."""
+    lo, hi = quant.int_range(bits)
+    vals = jax.random.randint(jax.random.PRNGKey(seed), (n,), lo, hi + 1,
+                              dtype=jnp.int32).astype(jnp.int8)
+    packed = quant.pack_po2(vals, bits)
+    assert packed.dtype == jnp.uint8
+    assert packed.size == quant.packed_length(n, bits) == (n + 1) // 2
+    back = quant.unpack_po2(packed, bits, (n,))
+    assert back.dtype == jnp.int8
+    assert bool(jnp.array_equal(back, vals))
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(0, 10**6))
+def test_packed_qtensor_per_channel_roundtrip(rows, cols, seed):
+    """Per-channel axis_exponents trees round-trip exactly through the
+    packed container — integers in, integers out, no float detour."""
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.randint(key, (rows, cols), -8, 8).astype(jnp.int8)
+    axis = jax.random.randint(jax.random.fold_in(key, 1), (cols,),
+                              -12, 13).astype(jnp.int8)
+    qt = quant.QTensor.store(vals, 3, bits=4, axis_exponents=axis)
+    assert bool(jnp.array_equal(qt.int_values(), vals))
+    assert bool(jnp.array_equal(qt.axis_exponents, axis))
+    assert qt.stored_bytes == (rows * cols + 1) // 2 + cols
+    # dequantise applies both scales (the float view, not the storage)
+    want = vals.astype(jnp.float32) * 2.0**-3 * \
+        jnp.exp2(-axis.astype(jnp.float32))
+    assert bool(jnp.array_equal(qt.dequantize(), want))
+
+
+def test_pack_po2_roundtrip_deterministic_sweep():
+    """Codec round-trip without the hypothesis extra: every 4-bit value,
+    odd/even/empty lengths, and a 2-D shape."""
+    all_vals = jnp.arange(-8, 8, dtype=jnp.int8)
+    assert bool(jnp.array_equal(
+        quant.unpack_po2(quant.pack_po2(all_vals, 4), 4, (16,)), all_vals))
+    rng = np.random.RandomState(0)
+    for n in (0, 1, 2, 7, 27, 64):
+        v = jnp.asarray(rng.randint(-8, 8, size=n), jnp.int8)
+        p = quant.pack_po2(v, 4)
+        assert p.size == (n + 1) // 2
+        assert bool(jnp.array_equal(quant.unpack_po2(p, 4, (n,)), v))
+    m = jnp.asarray(rng.randint(-8, 8, size=(5, 3)), jnp.int8)   # odd total
+    assert bool(jnp.array_equal(
+        quant.unpack_po2(quant.pack_po2(m, 4), 4, (5, 3)), m))
+
+
+def test_pack_po2_empty_and_scalar():
+    empty = jnp.zeros((0,), jnp.int8)
+    assert quant.pack_po2(empty, 4).size == 0
+    assert quant.unpack_po2(quant.pack_po2(empty, 4), 4, (0,)).size == 0
+    one = jnp.asarray([-5], jnp.int8)
+    p = quant.pack_po2(one, 4)
+    assert p.size == 1
+    assert int(quant.unpack_po2(p, 4, (1,))[0]) == -5
+
+
+def test_qt_einsum_value_exact_vs_dequantize():
+    """The integer-resident linear path returns exactly the values of the
+    dequantise-first einsum (po2 unpack + de-scale are exact in f32)."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (4, 10))
+    w = 0.2 * jax.random.normal(jax.random.fold_in(key, 1), (10, 6))
+    for bits in (8, 4):
+        qt = quant.quantize_po2(w, quant.choose_exponent(w, bits=bits),
+                                bits=bits, rounding="nearest")
+        got = quant.qt_einsum("bd,df->bf", x, qt)
+        want = jnp.einsum("bd,df->bf", x, qt.dequantize())
+        assert bool(jnp.array_equal(got, want)), bits
+
+
 def test_qmatmul_matches_float():
     key = jax.random.PRNGKey(2)
     x = jax.random.normal(key, (8, 32)) * 0.5

@@ -59,6 +59,32 @@ def test_int8_matmul_sweep(mnk, residual_bits):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
 
 
+def test_int8_matmul_accepts_stored_qtensors():
+    """The full-integer path runs the Pallas kernel directly on stored
+    operands — int8 and nibble-packed int4 QTensors — reading exponents
+    off the containers (the Engine's integer-resident storage form)."""
+    from repro.core import quant
+
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.randint(k1, (8, 32), -16, 16, jnp.int8)
+    w4 = jax.random.randint(k2, (32, 16), -8, 8, jnp.int8)
+    qx = quant.QTensor(x, 5)
+    qw = quant.QTensor.store(w4, 6, bits=4)           # nibble-packed
+    assert qw.packed and qw.values.dtype == jnp.uint8
+    got = ops.int8_matmul(qx, qw, out_exp=7)
+    want = ref.int8_matmul(x, w4, x_exp=5, w_exp=6, out_exp=7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # per-channel axis exponents fold into the epilogue
+    axis = jax.random.randint(jax.random.fold_in(KEY, 3), (16,),
+                              -2, 3).astype(jnp.int8)
+    qwc = quant.QTensor.store(w4, 6, bits=4, axis_exponents=axis)
+    got_c = ops.int8_matmul(qx, qwc, out_exp=7)
+    np.testing.assert_allclose(
+        np.asarray(got_c),
+        np.asarray(want * np.exp2(-np.asarray(axis, np.float32))),
+        atol=1e-6)
+
+
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,d", [
     (1, 2, 2, 64, 64, 32),       # MHA square
     (2, 4, 2, 64, 64, 32),       # GQA

@@ -311,6 +311,41 @@ def test_export_save_writes_artifact(trained, tmp_path):
     assert any(l["kind"] == "qtensor" for l in meta["leaves"])
 
 
+@pytest.mark.parametrize("bits", [8, 4])
+def test_export_save_load_deploys_bit_identical(params, tmp_path, bits):
+    """The full artifact loop at both stored widths: quantise -> save
+    packed bytes -> load -> deploy the loaded tree directly (no float
+    detour) — logits bit-identical to the in-memory export, and the .npz
+    payload is the packed ROM image (nibble bytes at 4-bit)."""
+    import numpy as np
+
+    from repro.qat.export import load as export_load
+    from repro.qat.export import save as export_save
+
+    recipe = runtime.QuantRecipe.from_config(CFG, bits=bits)
+    if bits < 8:
+        recipe = recipe.calibrated(params)
+    spec = qat.QATSpec(recipe)
+    ex = qat.export(params, spec, None)
+    path = str(tmp_path / f"kwt_int{bits}")
+    export_save(path, ex)
+    lrecipe, lq = export_load(path, ex.qparams)
+    assert lrecipe == ex.recipe
+    for a, b in zip(jax.tree.leaves(ex.qparams), jax.tree.leaves(lq)):
+        assert a.dtype == b.dtype           # stored form, no upcast
+        assert bool(jnp.array_equal(a, b))
+    data = np.load(path + ".npz")
+    stored = sum(int(data[k].size * data[k].dtype.itemsize) for k in
+                 data.files)
+    assert stored == sum(ex.quantized_bytes)     # packed bytes on disk
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(11), (4, *CFG.input_dim))
+    eng_mem = runtime.compile_model(CFG, ex.params, backend="lut",
+                                    recipe=ex.recipe)
+    eng_disk = runtime.compile_model(CFG, lq, backend="lut", recipe=lrecipe)
+    assert eng_disk.int_resident
+    assert bool(jnp.array_equal(eng_mem.forward(x), eng_disk.forward(x)))
+
+
 # ---------------------------------------------------------------------------
 # checkpoint.manager round-trip of the full QAT train state (satellite)
 # ---------------------------------------------------------------------------

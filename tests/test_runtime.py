@@ -204,11 +204,93 @@ def test_engine_introspection(params):
     f = runtime.compile_model(CFG, params, backend="float")
     l = runtime.compile_model(CFG, params, backend="lut")
     p = runtime.compile_model(CFG, params, backend="pallas")
-    assert (f.rom_bytes, l.rom_bytes, p.rom_bytes) == (0, 2688, 2688)
+    # rom_bytes is now the TRUE packed weight image (1646 params = the
+    # paper's 1.65 kB; the 146 rank-1 leaves stay float per §IV -> 1500 B
+    # of int8 ROM); the LUT bank moved to lut_bytes (paper: 2.69 kB).
+    assert (f.rom_bytes, l.rom_bytes, p.rom_bytes) == (0, 1500, 1500)
+    assert (f.lut_bytes, l.lut_bytes, p.lut_bytes) == (0, 2688, 2688)
     assert f.interpret is None and l.interpret is None and p.interpret is True
     assert l.param_bytes < f.param_bytes        # int8 weights + float norms
     assert "lut" in l.describe() and "interpret" in p.describe()
     assert f.backend_name == "float"
+
+
+# ---------------------------------------------------------------------------
+# integer-resident QTensors (the storage-contract acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["lut", "pallas"])
+def test_integer_resident_bit_identical_to_dequant_first(params, mfcc,
+                                                         backend):
+    """lut/pallas engines keep weights integer-resident by default; their
+    logits are BIT-IDENTICAL to the dequantise-first float-weight path
+    (po2 epilogue scaling is exact and commutes with the reduction)."""
+    resident = runtime.compile_model(CFG, params, backend=backend)
+    dequant = runtime.compile_model(CFG, params, backend=backend,
+                                    integer_resident=False)
+    assert resident.int_resident and not dequant.int_resident
+    assert isinstance(resident.params["proj_w"], quant.QTensor)
+    assert bool(jnp.array_equal(resident.forward(mfcc),
+                                dequant.forward(mfcc))), backend
+
+
+def test_integer_resident_int4_bit_identical_and_packed(params, mfcc):
+    """4-bit recipe: weights live nibble-packed inside the Engine, logits
+    still bit-identical to the dequant-first path under the same recipe."""
+    r4 = runtime.QuantRecipe.from_config(CFG, bits=4).calibrated(params)
+    resident = runtime.compile_model(CFG, params, backend="lut", recipe=r4)
+    dequant = runtime.compile_model(CFG, params, backend="lut", recipe=r4,
+                                    integer_resident=False)
+    w = resident.params["proj_w"]
+    assert isinstance(w, quant.QTensor) and w.packed
+    assert w.values.dtype == jnp.uint8 and w.shape == (16, 12)
+    assert w.values.size == (16 * 12 + 1) // 2
+    assert bool(jnp.array_equal(resident.forward(mfcc), dequant.forward(mfcc)))
+
+
+def test_rom_bytes_match_paper_and_halve_at_int4(params):
+    """Acceptance: kwt-tiny packed ROM ~ the paper's 1.65 kB at 8-bit
+    (1646 params; our 146 rank-1 leaves stay float per §IV -> 1500 B of
+    weight ROM) and halves (±nibble padding) at 4-bit."""
+    e8 = runtime.compile_model(CFG, params, backend="lut")
+    assert e8.rom_bytes == 1500
+    paper_rom = 1646                       # 1.65 kB: every param at 1 byte
+    assert abs(e8.rom_bytes + 146 - paper_rom) <= 2   # exact modulo rank-1
+    r4 = runtime.QuantRecipe.from_config(CFG, bits=4).calibrated(params)
+    e4 = runtime.compile_model(CFG, params, backend="lut", recipe=r4)
+    n_leaves = 9                            # quantised rank>=2 leaves
+    assert e8.rom_bytes // 2 <= e4.rom_bytes <= e8.rom_bytes // 2 + n_leaves
+    assert e4.param_bytes < e8.param_bytes
+
+
+@pytest.mark.parametrize("backend", ["lut", "pallas"])
+def test_integer_resident_streaming_still_bit_identical(params, backend):
+    """The PR-2 streaming contract survives integer residency: packed
+    weights inside stream_step produce the same logits as offline."""
+    hops = T + 3
+    audio = 0.1 * jax.random.normal(jax.random.PRNGKey(7), (2, hops * HOP))
+    r4 = runtime.QuantRecipe.from_config(CFG, bits=4).calibrated(params)
+    eng = runtime.compile_model(CFG, params, backend=backend, recipe=r4)
+    assert eng.int_resident
+    state = stream_engine.init_stream_state(eng.exec_cfg, FCFG, 2)
+    logits = None
+    for i in range(0, hops * HOP, HOP):
+        state, logits = eng.stream_step(state, audio[:, i:i + HOP], FCFG)
+    off = jax.jit(lambda a: features.mfcc(a, FCFG))(audio)[..., hops - T:]
+    assert bool(jnp.array_equal(logits, eng.forward(off)))
+
+
+def test_compile_model_accepts_prequantized_tree(params, mfcc):
+    """A packed QTensor tree (e.g. a QAT export artifact) deploys as-is:
+    no float detour, no re-quantisation, same logits."""
+    recipe = runtime.QuantRecipe.from_config(CFG)
+    qtree = recipe.quantize(params)
+    from_float = runtime.compile_model(CFG, params, backend="lut",
+                                       recipe=recipe)
+    from_packed = runtime.compile_model(CFG, qtree, backend="lut")
+    assert from_packed.quantized_bytes == from_float.quantized_bytes
+    assert bool(jnp.array_equal(from_packed.forward(mfcc),
+                                from_float.forward(mfcc)))
 
 
 def test_lm_engine_rejects_kwt_entry_points():

@@ -98,6 +98,34 @@ def test_checkpoint_async(tmp_path):
     assert manager.latest_step(str(tmp_path)) == 1
 
 
+def test_checkpoint_packed_qtensor_tree_roundtrip(tmp_path):
+    """Packed QTensor trees round-trip WITHOUT upcasting: the stored
+    leaves (nibble-packed uint8 / int8 bodies, int8 axis exponents) come
+    back at their packed dtypes and the static exponent/bits/shape ride
+    the treedef — the checkpoint is the flashable ROM image."""
+    from repro.core import quant
+    from repro.runtime.recipe import QuantRecipe
+
+    w = 0.3 * jnp.asarray(np.random.RandomState(0).randn(9, 5), jnp.float32)
+    tree = {"w4": quant.quantize_po2(w, 4, bits=4),
+            "w8": quant.quantize_po2(w, 6, bits=8),
+            "pc": QuantRecipe(per_channel=True)._quantize_leaf(w),
+            "norm": jnp.ones((5,))}
+    manager.save(str(tmp_path), 2, tree)
+    target = jax.tree.map(jnp.zeros_like, tree)
+    out = manager.restore(str(tmp_path), 2, target)
+    assert out["w4"].values.dtype == jnp.uint8        # no upcast
+    assert out["w4"].values.size == (9 * 5 + 1) // 2  # packed bytes on disk
+    assert out["w4"].bits == 4 and out["w4"].shape == (9, 5)
+    assert out["w8"].values.dtype == jnp.int8
+    assert out["pc"].axis_exponents.dtype == jnp.int8
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and the restored tree dequantises identically (no float detour lost)
+    np.testing.assert_array_equal(np.asarray(out["w4"].dequantize()),
+                                  np.asarray(tree["w4"].dequantize()))
+
+
 # ---------------------------------------------------------------------------
 # data pipeline
 # ---------------------------------------------------------------------------
