@@ -18,7 +18,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import dataclasses
 import json
 
 from repro import runtime
@@ -29,7 +28,6 @@ from repro.configs.base import QuantConfig
 def run_variant(arch, shape_name, tag, cfg_override, seq_axis=None,
                 micro_override=None):
     from repro.launch import dryrun, mesh as meshlib, steps
-    from repro.configs import base as cb
 
     entry = registry.get(arch)
     shape = {s.name: s for s in entry.shapes}[shape_name]
@@ -42,7 +40,6 @@ def run_variant(arch, shape_name, tag, cfg_override, seq_axis=None,
             return json.load(f)
 
     # lower the full program (memory proof) + cost components
-    import jax
     prog = _build(cfg, shape, mesh, steps)
     lowered = steps.lower_program(prog, mesh, seq_axis=seq_axis)
     compiled = lowered.compile()

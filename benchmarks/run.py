@@ -17,7 +17,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def bench_kernels():
@@ -54,8 +53,14 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
 
     ``packed_rom_bytes`` is the TRUE packed integer weight image
     (``Engine.rom_bytes``: int8, or nibble-packed int4 for the extra
-    ``lut@int4`` row); ``lut_bytes`` the 2.69 kB LUT bank."""
-    from repro import runtime
+    ``lut@int4`` row); ``lut_bytes`` the 2.69 kB LUT bank.
+
+    Each row also carries the static-analysis verdict for its plan:
+    ``float_leak_count`` (residency pass: int->float casts in the unpack
+    stage — the number that must reach zero for full-integer execution)
+    and ``ram_budget_bytes`` (budget pass: ROM + LUT + peak activation
+    live-set, the figure gated against the paper's 64 kB target)."""
+    from repro import analysis, runtime
     from repro.configs import registry
     from repro.models import kwt
 
@@ -77,16 +82,22 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
         us = (time.perf_counter() - t0) / reps * 1e6
         bits = eng.recipe.bits if eng.recipe is not None else None
         label = name if recipe is None else f"{name}@int{bits}"
+        rep = analysis.check_engine(eng, passes=("residency", "budget"))
+        leaks = rep.result("residency").metrics["float_leak_count"]
+        ram = rep.result("budget").metrics["total_bytes"]
         row = {"backend": label, "us_per_forward": round(us, 1),
                "batch": batch, "interpret": eng.interpret,
                "packed_rom_bytes": eng.rom_bytes,
                "lut_bytes": eng.lut_bytes,
                "param_bytes": eng.param_bytes,
-               "int_resident": eng.int_resident, "bits": bits}
+               "int_resident": eng.int_resident, "bits": bits,
+               "float_leak_count": leaks,
+               "ram_budget_bytes": ram,
+               "analysis_ok": rep.ok}
         results.append(row)
         print(f"backend_{label},{us:.1f},rom={eng.rom_bytes}B;"
               f"lut={eng.lut_bytes}B;params={eng.param_bytes}B;"
-              f"interpret={eng.interpret}")
+              f"leaks={leaks};ram={ram}B;interpret={eng.interpret}")
     report = {"arch": "kwt-tiny", "batch": batch, "reps": reps,
               "device": jax.default_backend(), "results": results}
     with open(out_path, "w") as f:

@@ -20,7 +20,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import runtime
 from repro.configs import registry

@@ -13,7 +13,6 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro import runtime
 from repro.configs import registry

@@ -85,7 +85,7 @@ def main():
     acc_h = accuracy(eng_h, args.eval_n)
     print(f"[3] {eng_h.describe()}")
     print(f"    accuracy:                    {acc_h:.3f}  "
-          f"(paper Table IX: ~0.80 vs 0.872 float)")
+          "(paper Table IX: ~0.80 vs 0.872 float)")
 
 
 if __name__ == "__main__":

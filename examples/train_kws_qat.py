@@ -58,7 +58,7 @@ def accuracy(eng, n=512):
 
 def make_distill_spec(cfg, args):
     tcfg = D.teacher_config(registry.get("kwt-1").config, cfg)
-    print(f"[distill] training float KWT-1 teacher on the student grid "
+    print("[distill] training float KWT-1 teacher on the student grid "
           f"({tcfg.n_layers} layers, {tcfg.n_classes} classes, "
           f"{args.teacher_steps} steps)")
     tparams = D.train_teacher(tcfg, args.teacher_steps, seed=args.seed + 1)

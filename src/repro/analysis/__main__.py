@@ -1,0 +1,67 @@
+"""CLI: python -m repro.analysis check --config kwt_tiny --backend lut
+
+Runs the static-analysis pass pipeline over one compiled Engine plan and
+exits nonzero when any pass reports a violation — the CI analysis-gate
+entry point.  ``--mutate`` seeds a known violation (mutation testing:
+the gate asserts the checker FAILS on each one).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro import analysis
+from repro.analysis import mutations
+
+
+def _build_engine(config: str, backend: str, seed: int):
+    from repro import runtime
+    from repro.configs import registry
+
+    cfg = registry.get(config.replace("_", "-")).config
+    if cfg.family != "kwt":
+        raise SystemExit(
+            f"config {cfg.name!r}: the analysis CLI builds params for the "
+            "kwt family; analyse other families via analysis.check_engine")
+    from repro.models import kwt
+    params = kwt.init_params(cfg, jax.random.PRNGKey(seed))
+    return runtime.compile_model(cfg, params, backend=backend)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="run the pass pipeline on one plan")
+    chk.add_argument("--config", default="kwt_tiny",
+                     help="registry config name (kwt_tiny / kwt_1 / ...)")
+    chk.add_argument("--backend", default="lut",
+                     help="runtime backend (float / lut_float / lut / pallas)")
+    chk.add_argument("--passes", default=",".join(analysis.PASSES),
+                     help="comma-separated subset of "
+                          f"{','.join(analysis.PASSES)}")
+    chk.add_argument("--budget", type=int, default=None,
+                     help="override the RAM gate in bytes (default: 64 kB "
+                          "for the paper's deployment config)")
+    chk.add_argument("--mutate", default="none",
+                     choices=("none",) + mutations.MUTATIONS,
+                     help="seed a known violation (checker self-test)")
+    chk.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    with mutations.apply(args.mutate):
+        engine = _build_engine(args.config, args.backend, args.seed)
+        report = analysis.check_engine(
+            engine, passes=tuple(args.passes.split(",")),
+            budget=args.budget)
+    print(report.render())
+    if args.mutate != "none":
+        print(f"[mutation {args.mutate!r} seeded: "
+              f"{'CAUGHT' if not report.ok else 'MISSED'}]")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

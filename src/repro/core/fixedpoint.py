@@ -54,10 +54,23 @@ def fixed_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def fixed_shift_mul(a: jnp.ndarray, shift: int) -> jnp.ndarray:
-    """Multiply a Q8.24 value by 2^shift (the paper's power-of-2 rescale)."""
-    if shift >= 0:
-        return (a.astype(jnp.int32) << shift).astype(jnp.int32)
-    return (a.astype(jnp.int32) >> (-shift)).astype(jnp.int32)
+    """Multiply a Q8.24 value by 2^shift (the paper's power-of-2 rescale).
+
+    The left-shift path saturates like ``to_fixed`` does: ``a << shift``
+    on int32 silently wraps once |a| >= 2^(31-shift), and a wrapped
+    rescale flips the sign of the largest activations.  Values past the
+    representable range pin to the int32 extremes instead.
+    """
+    a = a.astype(jnp.int32)
+    if shift == 0:
+        return a
+    if shift < 0:
+        return (a >> (-shift)).astype(jnp.int32)
+    hi_lim = _INT32_MAX >> shift
+    lo_lim = _INT32_MIN >> shift
+    return jnp.where(a > hi_lim, _INT32_MAX,
+                     jnp.where(a < lo_lim, _INT32_MIN,
+                               a << shift)).astype(jnp.int32)
 
 
 def ilog2(x: jnp.ndarray) -> jnp.ndarray:

@@ -21,7 +21,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -262,9 +261,9 @@ def main():
                         print("  skipped:", rec["skipped"])
                     else:
                         print(
-                            f"  ok: peak/device = "
+                            "  ok: peak/device = "
                             f"{rec['memory']['peak_bytes_est']/1e9:.2f} GB "
-                            f"(TPU-adj "
+                            "(TPU-adj "
                             f"{rec['memory'].get('peak_bytes_tpu_adjusted', rec['memory']['peak_bytes_est'])/1e9:.2f})"
                             + (f", dominant={rec['roofline']['dominant']}"
                                if "roofline" in rec else ""))

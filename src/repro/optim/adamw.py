@@ -15,7 +15,6 @@ Functional API (pytree in/out, fully jit-able under pjit):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -197,7 +197,14 @@ class Engine:
         (the lut/pallas weight path) rather than a dequantised float copy."""
         return _has_qtensors(self.params)
 
-    def describe(self) -> str:
+    def describe(self, analyze: bool = False) -> str:
+        """One-line plan summary.  ``analyze=True`` appends the static-
+        analysis verdict (repro.analysis), running the pass pipeline on
+        first use; a verdict cached by an earlier ``check_engine`` call
+        is appended either way."""
+        if analyze and not hasattr(self, "_analysis_verdict"):
+            from repro import analysis
+            analysis.check_engine(self)
         q = "" if self.recipe is None else \
             f", w=2^{self.recipe.weight_exponent}" \
             f"/x=2^{self.recipe.input_exponent} " \
@@ -207,16 +214,18 @@ class Engine:
             f", pallas={'interpret' if self.interpret else 'mosaic'}"
         attn = "" if self.exec_cfg.attn_impl == "xla" else \
             f", attn={self.exec_cfg.attn_impl}"
+        verdict = getattr(self, "_analysis_verdict", None)
+        verdict = f" | {verdict}" if verdict else ""
         return (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
                 f"params {self.param_bytes} B, rom {self.rom_bytes} B, "
-                f"lut {self.lut_bytes} B{q}{interp}{attn}")
+                f"lut {self.lut_bytes} B{q}{interp}{attn}{verdict}")
 
     def _require_kwt(self, what: str):
         if self.exec_cfg.family != "kwt":
             raise NotImplementedError(
                 f"{what} is a KWT streaming entry point; family="
                 f"{self.exec_cfg.family!r} engines expose forward/prefill/"
-                f"decode_step")
+                "decode_step")
 
 
 def _has_qtensors(tree) -> bool:

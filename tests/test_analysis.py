@@ -1,0 +1,173 @@
+"""repro.analysis: the static verifier, verified.
+
+Three layers: (1) the shipped configs x backends come back clean — the
+CI analysis-gate contract; (2) each pass catches its seeded mutation
+(mutation testing: a checker that cannot fail is not checking); (3) the
+interval interpreter's unit-level behaviour on known pipelines.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis, runtime
+from repro.analysis import mutations, ranges
+from repro.analysis.__main__ import main as cli_main
+from repro.configs import registry
+from repro.core import fixedpoint as fxp
+from repro.models import kwt
+
+CFG = registry.get("kwt-tiny").config
+
+
+@pytest.fixture(scope="module")
+def params():
+    return kwt.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def lut_engine(params):
+    return runtime.compile_model(CFG, params, backend="lut")
+
+
+# ---------------------------------------------------------------------------
+# clean plans pass
+# ---------------------------------------------------------------------------
+
+def test_float_plan_clean(params):
+    eng = runtime.compile_model(CFG, params, backend="float")
+    rep = analysis.check_engine(eng)
+    assert rep.ok, rep.render()
+    assert rep.result("residency").metrics["float_leak_count"] == 0
+    assert rep.result("geometry").metrics["kernels"] == 0
+
+
+def test_lut_plan_clean_with_whitelisted_unpack(lut_engine):
+    rep = analysis.check_engine(lut_engine)
+    assert rep.ok, rep.render()
+    res = rep.result("residency")
+    # the known unpack stage: one float cast per rank-2 QTensor leaf,
+    # whitelisted with a report line, counted for the ROADMAP item
+    assert res.metrics["float_leak_count"] == 9
+    assert any(f.kind == "unpack-stage" and f.severity == "whitelisted"
+               for f in res.findings)
+    # in-module resident program: every cast sanctioned, none violating
+    assert res.metrics["descale_sites"] > 0
+    assert res.count("violation") == 0
+    # budget: the deployment plan fits the paper's 64 kB with the table
+    bud = rep.result("budget").metrics
+    assert bud["budget_bytes"] == 64 * 1024
+    assert bud["total_bytes"] <= bud["budget_bytes"]
+    assert bud["rom_bytes"] == lut_engine.rom_bytes
+    # verdict lands in describe()
+    assert "analysis: ok" in lut_engine.describe()
+
+
+def test_pallas_plan_clean_and_geometry(params):
+    eng = runtime.compile_model(CFG, params, backend="pallas")
+    rep = analysis.check_engine(eng)
+    assert rep.ok, rep.render()
+    geo = rep.result("geometry")
+    assert geo.metrics["kernels"] >= 2          # softmax + gelu kernels
+    assert 0 < geo.metrics["max_vmem_bytes"] < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# mutation testing: each pass catches its seeded violation
+# ---------------------------------------------------------------------------
+
+def test_mutation_float_leak_caught(lut_engine):
+    with mutations.apply("float_leak"):
+        rep = analysis.check_engine(lut_engine, passes=("residency",))
+    assert not rep.ok
+    assert any(f.kind == "float-leak" for f in rep.result("residency").findings)
+
+
+def test_mutation_unsat_shift_caught(lut_engine):
+    with mutations.apply("unsat_shift"):
+        rep = analysis.check_engine(lut_engine, passes=("ranges",))
+    assert not rep.ok
+    assert any("overflow" in f.kind and f.severity == "violation"
+               for f in rep.result("ranges").findings)
+
+
+def test_mutation_big_lut_caught(lut_engine):
+    with mutations.apply("big_lut"):
+        rep = analysis.check_engine(lut_engine, passes=("budget",))
+    assert not rep.ok
+    assert any(f.kind == "ram-budget" and f.severity == "violation"
+               for f in rep.result("budget").findings)
+
+
+def test_mutations_restore_cleanliness(lut_engine):
+    rep = analysis.check_engine(lut_engine)
+    assert rep.ok, "mutation context managers must restore the originals"
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (the CI gate contract)
+# ---------------------------------------------------------------------------
+
+def test_cli_clean_exits_zero(capsys):
+    assert cli_main(["check", "--config", "kwt_tiny",
+                     "--backend", "lut", "--passes", "residency,budget"]) == 0
+    out = capsys.readouterr().out
+    assert "analysis: ok" in out
+
+
+@pytest.mark.parametrize("mut", mutations.MUTATIONS)
+def test_cli_mutations_exit_nonzero(mut, capsys):
+    assert cli_main(["check", "--config", "kwt_tiny", "--backend", "lut",
+                     "--mutate", mut]) == 1
+    assert "CAUGHT" in capsys.readouterr().out
+
+
+def test_cli_budget_override():
+    assert cli_main(["check", "--config", "kwt_tiny", "--backend", "lut",
+                     "--passes", "budget", "--budget", "1024"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# interval interpreter units
+# ---------------------------------------------------------------------------
+
+def test_interval_flags_wrapping_shift():
+    def wrapping(v):
+        return (fxp.to_fixed(v) << 5).astype(jnp.int32)
+    f, _ = ranges.analyze_fn(wrapping, (jnp.zeros((4,)),),
+                             [ranges.Interval(-8.0, 8.0)], label="t")
+    assert any(f_.severity == "violation" and "overflow" in f_.kind
+               for f_ in f)
+
+
+def test_interval_accepts_saturating_shift():
+    f, outs = ranges.analyze_fn(
+        lambda v: fxp.fixed_shift_mul(fxp.to_fixed(v), 5),
+        (jnp.zeros((4,)),), [ranges.Interval(-8.0, 8.0)], label="t")
+    assert not any(f_.severity == "violation" for f_ in f)
+    assert any(f_.kind == "guarded-overflow" for f_ in f)
+    lo, hi = outs[0].lo, outs[0].hi
+    assert lo >= -(2**31) and hi <= 2**31 - 1
+
+
+def test_interval_fixed_mul_precondition():
+    one = fxp.ONE
+    clean, _ = ranges.analyze_fn(
+        fxp.fixed_mul, (jnp.zeros((4,), jnp.int32),) * 2,
+        [ranges.Interval(0, one), ranges.Interval(0, one)], label="t")
+    assert not any(f.severity == "violation" for f in clean)
+    dirty, _ = ranges.analyze_fn(
+        fxp.fixed_mul, (jnp.zeros((4,), jnp.int32),) * 2,
+        [ranges.Interval(0, one), ranges.Interval(0, 4 * one)], label="t")
+    assert any(f.kind == "fixed-mul-precondition" for f in dirty)
+
+
+def test_interval_softmax_pipeline_bounded():
+    from repro.core import approx
+    f, outs = ranges.analyze_fn(
+        lambda v: approx.softmax(v, mode="lut_fixed"),
+        (jnp.zeros((1, 27)),), [None], label="t",
+        suppress_frames=("reciprocal_q24", "fixed_mul"))
+    assert not any(f_.severity == "violation" for f_ in f)
+    # the Q8.24 -> float exit bounds the output to the representable range
+    assert outs[0].lo >= -128.0 and outs[0].hi <= 128.0

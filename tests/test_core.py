@@ -61,6 +61,80 @@ def test_fixed_saturation():
     assert int(fxp.to_fixed(jnp.float32(1e9))) == 2**31 - 1
 
 
+_INT32_MAX, _INT32_MIN = 2**31 - 1, -(2**31)
+
+
+def test_to_fixed_saturation_edges():
+    """Round-trip saturation at the Q8.24 representable range [-128, 128)."""
+    assert int(fxp.to_fixed(jnp.float32(128.0))) == _INT32_MAX
+    assert int(fxp.to_fixed(jnp.float32(-128.0))) == _INT32_MIN
+    assert int(fxp.to_fixed(jnp.float32(-129.5))) == _INT32_MIN
+    assert float(fxp.to_float(jnp.int32(_INT32_MIN))) == -128.0
+    # the largest f32 below 128 still fits and round-trips exactly
+    # (x * 2^24 is an integer at this magnitude: f32 ulp(128) = 2^-16)
+    x = np.nextafter(np.float32(128.0), np.float32(0.0))
+    q = int(fxp.to_fixed(jnp.float32(x)))
+    assert q <= _INT32_MAX
+    assert float(fxp.to_float(jnp.int32(q))) == float(x)
+
+
+@given(st.floats(min_value=128.0, max_value=3e38))
+def test_to_fixed_saturates_above_range(x):
+    assert int(fxp.to_fixed(jnp.float32(x))) == _INT32_MAX
+    assert int(fxp.to_fixed(jnp.float32(-x))) == _INT32_MIN
+
+
+@given(st.integers(min_value=0, max_value=fxp.ONE),
+       st.integers(min_value=0, max_value=fxp.ONE))
+def test_fixed_mul_exact_in_unit_domain(qa, qb):
+    """The documented precondition: for |a|,|b| <= 1.0 the 12/12-limb
+    product sits within 2 LSB of the wide (a*b)>>24, never above it."""
+    got = int(fxp.fixed_mul(jnp.int32(qa), jnp.int32(qb)))
+    exact = (qa * qb) >> fxp.FRAC_BITS
+    assert 0 <= exact - got <= 2
+
+
+def test_fixed_mul_unit_boundary():
+    """|a|,|b| at and just above 1.0 in Q8.24 (the exactness boundary)."""
+    one = fxp.ONE
+    assert int(fxp.fixed_mul(jnp.int32(one), jnp.int32(one))) == one
+    assert int(fxp.fixed_mul(jnp.int32(one), jnp.int32(-one))) == -one
+    assert int(fxp.fixed_mul(jnp.int32(one), jnp.int32(one // 2))) == one // 2
+    # just above 1.0 the limb split still tracks the wide product ...
+    for qa in (one + 1, one + 4096, 3 * one // 2):
+        exact = (qa * qa) >> fxp.FRAC_BITS
+        got = int(fxp.fixed_mul(jnp.int32(qa), jnp.int32(qa)))
+        assert 0 <= exact - got <= 2, qa
+    # ... but far outside the precondition the partial products wrap
+    # int32 (ah*bh ~ 2^37 at |a|=100) — why the bound exists.
+    big = fxp.to_fixed(jnp.float32(100.0))
+    exact = (int(big) * int(big)) >> fxp.FRAC_BITS
+    assert abs(int(fxp.fixed_mul(big, big)) - exact) > fxp.ONE
+
+
+def test_fixed_shift_mul_saturates():
+    """Regression: the left-shift path saturates instead of wrapping."""
+    a = fxp.to_fixed(jnp.float32(8.0))                  # 2^27
+    assert int(fxp.fixed_shift_mul(a, 5)) == _INT32_MAX  # 8 * 2^5 = 256
+    assert int(fxp.fixed_shift_mul(-a, 5)) == _INT32_MIN
+    # in-range shifts are the exact power-of-2 multiply
+    v = fxp.to_fixed(jnp.float32(1.25))
+    assert int(fxp.fixed_shift_mul(v, 3)) == int(v) << 3
+    assert int(fxp.fixed_shift_mul(v, 0)) == int(v)
+    assert int(fxp.fixed_shift_mul(v, -2)) == int(v) >> 2
+    # the exact boundary: the largest magnitude that still fits
+    lim = _INT32_MAX >> 4
+    assert int(fxp.fixed_shift_mul(jnp.int32(lim), 4)) == lim << 4
+    assert int(fxp.fixed_shift_mul(jnp.int32(lim + 1), 4)) == _INT32_MAX
+
+
+@given(st.integers(min_value=_INT32_MIN, max_value=_INT32_MAX),
+       st.integers(min_value=0, max_value=8))
+def test_fixed_shift_mul_saturation_property(q, s):
+    got = int(fxp.fixed_shift_mul(jnp.int32(q), s))
+    assert got == max(min(q << s, _INT32_MAX), _INT32_MIN)
+
+
 # ---------------------------------------------------------------------------
 # LUT bank: the paper's ROM, bit for bit
 # ---------------------------------------------------------------------------

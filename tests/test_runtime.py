@@ -91,7 +91,7 @@ def test_three_backend_parity(params, mfcc):
     # whose Q8.24 pipeline matches the jnp reference exactly (int32 sums
     # are order-independent).
     assert bool(jnp.array_equal(out["lut"], out["pallas"])), (
-        f"pallas kernel diverged from the Q8.24 reference (max diff "
+        "pallas kernel diverged from the Q8.24 reference (max diff "
         f"{float(jnp.max(jnp.abs(out['lut'] - out['pallas'])))})")
 
 
