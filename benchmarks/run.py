@@ -47,9 +47,24 @@ def bench_kernels():
 
 
 def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
-                        batch: int = 64, reps: int = 20) -> dict:
+                        batch: int = 64, reps: int = 20,
+                        warmup: int = 3) -> dict:
     """Per-backend forward latency of the Engine the launchers actually
     serve (runtime.compile_model on KWT-Tiny), emitted as JSON.
+
+    Timing protocol: ``warmup`` calls are discarded (compile + cache
+    effects), then ``reps`` calls are timed in aggregate
+    (``us_per_forward``, the historical trajectory figure) and ``reps``
+    more are timed per call with a sync each — those samples feed the
+    telemetry latency schema (``mean_us``/``p50_us``/``p95_us``/
+    ``p99_us``, the same field names the serve metrics export).
+
+    A final traced pass (``telemetry.tracing``) attributes each forward
+    to its stage spans: ``unpack_us`` (jitted QTensor dequant — the cost
+    ``lut`` pays over ``float``; the ROADMAP full-integer item exists to
+    delete it) and ``encode_us`` (the model executable), plus
+    ``span_coverage_pct`` (named children / forward wall time) and
+    ``telemetry_overhead_pct`` (traced vs untraced per-call mean).
 
     ``packed_rom_bytes`` is the TRUE packed integer weight image
     (``Engine.rom_bytes``: int8, or nibble-packed int4 for the extra
@@ -60,7 +75,9 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     stage — the number that must reach zero for full-integer execution)
     and ``ram_budget_bytes`` (budget pass: ROM + LUT + peak activation
     live-set, the figure gated against the paper's 64 kB target)."""
-    from repro import analysis, runtime
+    import numpy as np
+
+    from repro import analysis, runtime, telemetry
     from repro.configs import registry
     from repro.models import kwt
 
@@ -74,18 +91,41 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     results = []
     for name, recipe in plans:
         eng = runtime.compile_model(cfg, params, backend=name, recipe=recipe)
-        jax.block_until_ready(eng.forward(x))        # compile + warm
+        for _ in range(max(warmup, 1)):              # compile + warm, discard
+            jax.block_until_ready(eng.forward(x))
         t0 = time.perf_counter()
         for _ in range(reps):
             outp = eng.forward(x)
         jax.block_until_ready(outp)
         us = (time.perf_counter() - t0) / reps * 1e6
+        samples = []                                 # per-call, synced
+        for _ in range(reps):
+            t1 = time.perf_counter()
+            jax.block_until_ready(eng.forward(x))
+            samples.append((time.perf_counter() - t1) * 1e6)
+        lat = telemetry.latency_summary(samples, unit="us")
+        with telemetry.tracing() as tr:              # stage attribution
+            for _ in range(reps):
+                eng.forward(x)
+        unpack_us = float(np.mean(tr.durations_us("unpack")))
+        encode_us = float(np.mean(tr.durations_us("encode")))
+        traced_us = float(np.median(tr.durations_us("forward")))
+        coverage = telemetry.span_coverage(tr, "forward")
+        # median-vs-median: per-call means on a shared CPU are dominated
+        # by scheduler noise, which would read as fake "overhead"
+        overhead = 100.0 * (traced_us - lat["p50_us"]) / lat["p50_us"]
         bits = eng.recipe.bits if eng.recipe is not None else None
         label = name if recipe is None else f"{name}@int{bits}"
         rep = analysis.check_engine(eng, passes=("residency", "budget"))
         leaks = rep.result("residency").metrics["float_leak_count"]
         ram = rep.result("budget").metrics["total_bytes"]
         row = {"backend": label, "us_per_forward": round(us, 1),
+               **lat,
+               "unpack_us": round(unpack_us, 1),
+               "encode_us": round(encode_us, 1),
+               "span_coverage_pct": round(100.0 * coverage, 1),
+               "telemetry_overhead_pct": round(overhead, 2),
+               "warmup": warmup,
                "batch": batch, "interpret": eng.interpret,
                "packed_rom_bytes": eng.rom_bytes,
                "lut_bytes": eng.lut_bytes,
@@ -95,11 +135,14 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
                "ram_budget_bytes": ram,
                "analysis_ok": rep.ok}
         results.append(row)
-        print(f"backend_{label},{us:.1f},rom={eng.rom_bytes}B;"
+        print(f"backend_{label},{us:.1f},p50={lat['p50_us']}us;"
+              f"p95={lat['p95_us']}us;unpack={unpack_us:.1f}us;"
+              f"encode={encode_us:.1f}us;rom={eng.rom_bytes}B;"
               f"lut={eng.lut_bytes}B;params={eng.param_bytes}B;"
               f"leaks={leaks};ram={ram}B;interpret={eng.interpret}")
     report = {"arch": "kwt-tiny", "batch": batch, "reps": reps,
-              "device": jax.default_backend(), "results": results}
+              "warmup": warmup, "device": jax.default_backend(),
+              "results": results}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}", file=sys.stderr)

@@ -22,6 +22,7 @@ import time
 import jax
 
 from repro import runtime
+from repro import telemetry
 from repro.configs import registry
 from repro.models import kwt
 from repro.stream import detector as det
@@ -45,23 +46,36 @@ def bench_one(cfg, fcfg, dcfg, params, n_streams: int, hops: int,
             dstate, engine.posteriors(logits), dcfg, warm=engine.warm(state))
         return state, dstate, events
 
-    # warm-up: compile + fill the receptive field
+    # warm-up (discarded): compile + fill the receptive field
     warm_hops = engine.window_frames(cfg) // k + 2
     for _ in range(warm_hops):
         state, dstate, events = step(params, state, dstate, chunk)
     jax.block_until_ready(events["score"])
 
+    # aggregate timing (async dispatch, one sync): the RTF figure
     t0 = time.perf_counter()
     for _ in range(hops):
         state, dstate, events = step(params, state, dstate, chunk)
     jax.block_until_ready(events["score"])
     dt = time.perf_counter() - t0
 
+    # per-hop samples (synced each hop) -> the shared telemetry latency
+    # schema, so BENCH_stream rows and the live serve_hop_latency_ms
+    # histogram carry the same p50/p95/p99 field names.
+    samples = []
+    for _ in range(hops):
+        t1 = time.perf_counter()
+        state, dstate, events = step(params, state, dstate, chunk)
+        jax.block_until_ready(events["score"])
+        samples.append((time.perf_counter() - t1) * 1e3)
+
     per_step_ms = dt / hops * 1e3
     audio_ms = k * fcfg.hop_len / fcfg.sample_rate * 1e3
     rtf = per_step_ms / audio_ms
     return {"streams": n_streams, "chunk_hops": k,
+            "warmup_hops": warm_hops,
             "per_step_ms": round(per_step_ms, 4),
+            **telemetry.latency_summary(samples, unit="ms"),
             "rtf": round(rtf, 5),
             "aggregate_realtime_x": round(n_streams / rtf, 1)}
 
@@ -88,15 +102,15 @@ def main(argv=None):
         eng = runtime.compile_model(base, params, backend=b)
         modes[b] = (eng.exec_cfg, eng.params)
     results = []
-    print("mode,streams,per_step_ms,rtf,aggregate_realtime_x")
+    print("mode,streams,per_step_ms,p50_ms,p95_ms,rtf,aggregate_realtime_x")
     for mode, (cfg, p) in modes.items():
         for n in args.streams:
             r = {"mode": mode,
                  **bench_one(cfg, fcfg, dcfg, p, n, args.hops,
                              args.chunk_hops)}
             results.append(r)
-            print(f"{mode},{n},{r['per_step_ms']},{r['rtf']},"
-                  f"{r['aggregate_realtime_x']}")
+            print(f"{mode},{n},{r['per_step_ms']},{r['p50_ms']},"
+                  f"{r['p95_ms']},{r['rtf']},{r['aggregate_realtime_x']}")
 
     report = {"arch": args.arch,
               "frontend": {"sample_rate": fcfg.sample_rate,

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import fixedpoint as fxp
 from repro.core import lut as lutlib
+from repro.telemetry import taps as _health
 
 
 def ste(primal_fn, smooth_fn):
@@ -152,6 +153,12 @@ def softmax_lut(x: jnp.ndarray, axis: int = -1, *, fixed: bool = False,
 
 def softmax(x: jnp.ndarray, axis: int = -1, mode: str = "exact",
             interpret: bool = True, **kw) -> jnp.ndarray:
+    # quantisation-health tap (telemetry.taps): trace-time no-op unless an
+    # Engine taps program is collecting.  Placed in the dispatcher — never
+    # inside the ste() custom_vjp primal, whose inner trace's tracers must
+    # not leak into the aux output.
+    if _health.active() and axis in (-1, x.ndim - 1):
+        _health.tap_softmax(x, None, fixed=mode in ("lut_fixed", "pallas"))
     if mode == "exact":
         return softmax_exact(x, axis)
     if mode == "lut":
@@ -176,6 +183,8 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
     computes valid entries — not approximated to e^{-10} by the clip.
     Rows that are fully masked return zeros.
     """
+    if _health.active():   # health tap; see softmax() for placement notes
+        _health.tap_softmax(s, mask, fixed=mode in ("lut_fixed", "pallas"))
     if mode == "exact" and s.dtype == jnp.bfloat16:
         # dtype-preserving path: the materialised score/prob tensors stay
         # bf16 (halved HBM traffic — §Perf H1); row stats reduce in f32.
@@ -287,6 +296,8 @@ def gelu_lut(x: jnp.ndarray, *, interp: bool = False,
 
 def gelu(x: jnp.ndarray, mode: str = "exact", interpret: bool = True,
          **kw) -> jnp.ndarray:
+    if _health.active():   # health tap; see softmax() for placement notes
+        _health.tap_gelu(x)
     if mode == "exact":
         return gelu_exact(x)
     if mode == "lut":

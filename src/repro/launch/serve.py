@@ -26,9 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime
+from repro import telemetry
 from repro.configs import registry
 from repro.dist import ctx
 from repro.launch import mesh as meshlib
+from repro.launch import serve_common
 from repro.launch import steps
 
 
@@ -44,6 +46,7 @@ def main(argv=None):
                     help="execution backend (runtime.compile_model); "
                          "the former --quantize flag is --backend lut_float")
     ap.add_argument("--seed", type=int, default=0)
+    serve_common.add_telemetry_args(ap)
     args = ap.parse_args(argv)
     backend = args.backend
 
@@ -60,10 +63,23 @@ def main(argv=None):
               "gen": int(rng.randint(4, args.max_len // 2))}
              for i in range(args.requests)]
 
-    with mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
+    with serve_common.session(args.telemetry_out) as (tracer, met), \
+            mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
         params = mod.init_params(cfg, jax.random.PRNGKey(args.seed))
         eng = runtime.compile_model(cfg, params, backend=backend)
-        print(eng.describe())
+        telemetry.log("engine", plan=eng.describe())
+
+        prefill_ms = met.histogram("serve_prefill_latency_ms",
+                                   "batched prompt prefill wall time",
+                                   unit="ms")
+        decode_ms = met.histogram("serve_decode_latency_ms",
+                                  "decode step wall time", unit="ms")
+        occupancy = met.gauge("serve_lane_occupancy",
+                              "active slots / batch slots")
+        qdepth = met.gauge("serve_queue_depth", "requests waiting for a slot")
+        refill_ctr = met.counter("serve_lane_refills_total",
+                                 "slot refill operations")
+        tokens_ctr = met.counter("serve_tokens_total", "tokens decoded")
 
         B = args.slots
         state = eng.init_decode_state(B, args.max_len)
@@ -87,12 +103,23 @@ def main(argv=None):
                     toks[i, -len(r["prompt"]):] = r["prompt"]
                     active[i] = r
                     remaining[i] = r["gen"]
+                refill_ctr.inc(len(refills))
                 state = eng.init_decode_state(B, args.max_len)
+                t_pf = time.perf_counter()
                 logits, state = eng.prefill(jnp.asarray(toks), state)
+                logits = jax.block_until_ready(logits)
+                prefill_ms.observe(1e3 * (time.perf_counter() - t_pf))
                 cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            occupancy.set(sum(1 for a in active if a is not None) / B)
+            qdepth.set(len(queue))
+            t_dc = time.perf_counter()
             logits, state = eng.decode_step(cur, state)
+            logits = jax.block_until_ready(logits)
+            decode_ms.observe(1e3 * (time.perf_counter() - t_dc))
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            decoded += int(sum(1 for i in range(B) if active[i]))
+            n_active = int(sum(1 for i in range(B) if active[i]))
+            decoded += n_active
+            tokens_ctr.inc(n_active)
             for i in range(B):
                 if active[i] is None:
                     continue
@@ -101,9 +128,9 @@ def main(argv=None):
                     done.append(active[i]["id"])
                     active[i] = None
         dt = time.time() - t0
-        print(f"served {args.requests} requests, {decoded} tokens decoded "
-              f"in {dt:.2f}s -> {decoded/dt:.1f} tok/s "
-              f"(backend={eng.backend_name})")
+        telemetry.log("serve_done", requests=args.requests, tokens=decoded,
+                      wall_s=dt, tok_s=decoded / dt,
+                      backend=eng.backend_name, **decode_ms.summary())
 
 
 if __name__ == "__main__":

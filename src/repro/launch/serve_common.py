@@ -1,0 +1,47 @@
+"""Shared serving telemetry plumbing for ``serve.py`` / ``stream_serve.py``.
+
+Both servers grew the same observability boilerplate — a ``--telemetry-out``
+flag, a per-run metrics :class:`~repro.telemetry.Registry`, and the
+end-of-run artifact writes — so it lives here once.  (The other candidate
+for deduplication, a "copy-pasted trainer", does not exist: ``serve.py``
+serves LM checkpoints and has no trainer, and ``examples/stream_kws.py``
+already imports ``stream_serve.train_params`` rather than copying it.)
+
+``session(out_path)`` yields ``(tracer, registry)``:
+
+* ``out_path=None`` — tracing stays disabled (the zero-cost fast path in
+  every instrumented call site) and the registry is export-less scratch.
+* ``out_path="trace.json"`` — spans record for the whole run; on exit the
+  Chrome trace lands at ``trace.json`` with the Prometheus text + JSON
+  metric exports as siblings (``trace.prom`` / ``trace.metrics.json``) —
+  the layout ``python -m repro.telemetry`` validates in CI.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+from repro import telemetry
+
+
+def add_telemetry_args(ap) -> None:
+    ap.add_argument("--telemetry-out", default=None, metavar="TRACE_JSON",
+                    help="enable span tracing and write the Chrome trace "
+                         "here, with .prom / .metrics.json metric exports "
+                         "as siblings")
+
+
+@contextlib.contextmanager
+def session(out_path: str | None):
+    registry = telemetry.Registry()
+    tracer = telemetry.enable() if out_path else None
+    try:
+        yield tracer, registry
+    finally:
+        if out_path:
+            telemetry.disable()
+            tracer.save(out_path)
+            prom, js = registry.save(os.path.splitext(out_path)[0])
+            telemetry.log("telemetry_saved", trace=out_path,
+                          events=len(tracer.events), prom=prom, metrics=js)

@@ -22,6 +22,7 @@ from repro.launch import mesh as meshlib
 from repro.models import encdec as E
 from repro.models import transformer as T
 from repro.optim import adamw
+from repro.telemetry import annotate
 
 # grad-accumulation microbatch counts chosen so per-device activation
 # checkpoints fit v5e HBM (derivation in DESIGN.md §3 memory table)
@@ -217,24 +218,30 @@ def make_train_step(cfg: ModelConfig, shape: ShapeSpec, hp=None, n_micro=None,
         return jnp.mean(losses), grads
 
     def finish(loss, grads, opt_state, params):
-        new_params, new_opt, metrics = adamw.update(
-            grads, opt_state, params, hp, scan_stacked=cfg.scan_layers)
+        # telemetry.annotate stages (jax.named_scope) name the grads /
+        # grad_sync / optimizer regions in XLA profiles; metadata-only.
+        with annotate("optimizer"):
+            new_params, new_opt, metrics = adamw.update(
+                grads, opt_state, params, hp, scan_stacked=cfg.scan_layers)
         metrics["loss"] = loss
         return new_params, new_opt, metrics
 
     if sync_mesh is None:
         def train_step(params, opt_state, batch):
-            loss, grads = compute_grads(params, batch)
+            with annotate("grads"):
+                loss, grads = compute_grads(params, batch)
             return finish(loss, grads, opt_state, params)
         return train_step
 
     from repro.dist import compress
 
     def train_step_synced(params, opt_state, err, batch):
-        loss, grads = compute_grads(params, batch)
-        grads, err = compress.compressed_grad_sync(
-            grads, err, sync_mesh, per_channel=sync_per_channel,
-            bits=sync_bits)
+        with annotate("grads"):
+            loss, grads = compute_grads(params, batch)
+        with annotate("grad_sync"):
+            grads, err = compress.compressed_grad_sync(
+                grads, err, sync_mesh, per_channel=sync_per_channel,
+                bits=sync_bits)
         new_params, new_opt, metrics = finish(loss, grads, opt_state, params)
         return new_params, new_opt, err, metrics
 

@@ -30,10 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime
+from repro import telemetry
 from repro.configs import registry
 from repro.data import pipeline
 from repro.dist import ctx
 from repro.launch import mesh as meshlib
+from repro.launch import serve_common
 from repro.models import kwt
 from repro.stream import detector as det
 from repro.stream import engine
@@ -58,12 +60,17 @@ def train_params(cfg, fcfg, n_steps: int, seed: int):
     step = jax.jit(steps.make_train_step(cfg, shape, hp, n_micro=1))
     featurize = jax.jit(lambda a: features.mfcc(a, fcfg))
 
+    log_every = max(1, n_steps // 8)
     for i in range(n_steps):
         raw = pipeline.keyword_audio_batch(seed, i, batch=64, n_samples=n)
         params, opt, m = step(params, opt, {"mfcc": featurize(raw["audio"]),
                                             "labels": raw["labels"]})
-    print(f"[train] {n_steps} steps on audio-derived MFCC, "
-          f"final loss {float(m['loss']):.3f}")
+        if (i + 1) % log_every == 0 or i + 1 == n_steps:
+            telemetry.log("train_step", step=i + 1, of=n_steps,
+                          loss=float(m["loss"]), lr=float(m["lr"]),
+                          grad_norm=float(m["grad_norm"]))
+    telemetry.log("train_done", steps=n_steps, loss=float(m["loss"]),
+                  source="audio-derived MFCC")
     return params
 
 
@@ -84,6 +91,7 @@ def main(argv=None):
     ap.add_argument("--train-steps", type=int, default=80,
                     help="0 = serve a randomly initialised model")
     ap.add_argument("--seed", type=int, default=0)
+    serve_common.add_telemetry_args(ap)
     args = ap.parse_args(argv)
     backend = args.backend
 
@@ -101,7 +109,7 @@ def main(argv=None):
     # identical to Engine.forward's — the bit-identity contract.
     fparams = train_params(base_cfg, fcfg, args.train_steps, args.seed)
     eng = runtime.compile_model(base_cfg, fparams, backend=backend)
-    print(eng.describe())
+    telemetry.log("engine", plan=eng.describe())
     cfg, params = eng.exec_cfg, eng.live_params()
 
     B, k = args.slots, args.chunk_hops
@@ -117,7 +125,22 @@ def main(argv=None):
             args.seed, sid, n_hops=hops, hop_len=fcfg.hop_len)
         sources[sid] = {"audio": audio, "events": events, "hops": hops}
 
-    with mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
+    with serve_common.session(args.telemetry_out) as (tracer, met), \
+            mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
+        hop_ms = met.histogram("serve_hop_latency_ms",
+                               "engine+detector step wall time", unit="ms")
+        occupancy = met.gauge("serve_lane_occupancy",
+                              "active lanes / batch slots")
+        qdepth = met.gauge("serve_queue_depth", "streams waiting for a lane")
+        refills = met.counter("serve_lane_refills_total",
+                              "lane reset+refill operations")
+        hops_ctr = met.counter("serve_hops_total", "hops ingested per lane")
+        events_ctr = met.counter("serve_detector_events_total",
+                                 "keyword detections fired")
+        rtf = met.histogram("serve_stream_rtf", "per-stream real-time "
+                            "factor (wall seconds / audio seconds; <1 is "
+                            "faster than realtime)", unit="x")
+
         state = engine.init_stream_state(cfg, fcfg, B, keep_features=False)
         dstate = det.detector_init(dcfg, B)
         step = jax.jit(lambda p, s, ds, c: _joint_step(p, s, ds, c, cfg,
@@ -127,45 +150,68 @@ def main(argv=None):
 
         active = [None] * B          # stream id per lane
         offset = np.zeros(B, np.int64)
+        started = np.zeros(B, np.float64)      # lane fill wall time
         fired, done, hops_run = [], [], 0
         t0 = time.time()
         while len(done) < args.streams:
-            for i in range(B):       # refill free lanes
-                if active[i] is None and queue:
-                    active[i] = queue.pop(0)
-                    offset[i] = 0
-                    state, dstate = reset(state, dstate, i)
+            with telemetry.span("refill"):
+                for i in range(B):   # refill free lanes
+                    if active[i] is None and queue:
+                        active[i] = queue.pop(0)
+                        offset[i] = 0
+                        started[i] = time.time()
+                        state, dstate = reset(state, dstate, i)
+                        refills.inc()
+            n_active = sum(1 for a in active if a is not None)
+            occupancy.set(n_active / B)
+            qdepth.set(len(queue))
             chunk = np.zeros((B, chunk_samples), np.float32)
-            for i in range(B):
-                if active[i] is not None:
-                    a = sources[active[i]]["audio"]
-                    chunk[i] = a[offset[i]:offset[i] + chunk_samples]
-                    offset[i] += chunk_samples
-            state, dstate, events = step(params, state, dstate,
-                                         jnp.asarray(chunk))
+            with telemetry.span("pack"):
+                for i in range(B):
+                    if active[i] is not None:
+                        a = sources[active[i]]["audio"]
+                        chunk[i] = a[offset[i]:offset[i] + chunk_samples]
+                        offset[i] += chunk_samples
+            t_hop = time.perf_counter()
+            with telemetry.span("hop", {"backend": eng.backend_name}):
+                state, dstate, events = step(params, state, dstate,
+                                             jnp.asarray(chunk))
+                # the loop syncs on events every hop anyway (fired_now
+                # below); blocking here just moves the sync inside the
+                # measured window.
+                events = jax.block_until_ready(events)
+            hop_ms.observe(1e3 * (time.perf_counter() - t_hop))
             hops_run += k
+            hops_ctr.inc(k)
             fired_now = np.asarray(events["fired"])
-            for i in range(B):
-                sid = active[i]
-                if sid is None:
-                    continue
-                if fired_now[i]:
-                    hop = int(offset[i] // fcfg.hop_len)
-                    fired.append((sid, hop))
-                    print(f"[event] stream {sid} keyword @ "
-                          f"{det.event_time_s(hop, fcfg):.2f}s "
-                          f"(score {float(events['score'][i]):.2f})")
-                if offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
-                    done.append(sid)
-                    active[i] = None
+            with telemetry.span("detector"):
+                for i in range(B):
+                    sid = active[i]
+                    if sid is None:
+                        continue
+                    if fired_now[i]:
+                        hop = int(offset[i] // fcfg.hop_len)
+                        fired.append((sid, hop))
+                        events_ctr.inc()
+                        telemetry.log(
+                            "detector_event", stream=sid,
+                            t_s=det.event_time_s(hop, fcfg),
+                            score=float(events["score"][i]),
+                            backend=eng.backend_name)
+                    if offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
+                        done.append(sid)
+                        active[i] = None
+                        audio_s_i = sources[sid]["hops"] \
+                            * fcfg.hop_len / fcfg.sample_rate
+                        rtf.observe((time.time() - started[i]) / audio_s_i)
         dt = time.time() - t0
         audio_s = sum(s["hops"] for s in sources.values()) \
             * fcfg.hop_len / fcfg.sample_rate
         truth = sum(len(s["events"]) for s in sources.values())
-        print(f"served {args.streams} streams ({audio_s:.1f}s audio) in "
-              f"{dt:.2f}s -> {audio_s/dt:.1f}x realtime aggregate; "
-              f"{len(fired)} events fired / {truth} keywords present "
-              f"(backend={eng.backend_name})")
+        telemetry.log("serve_done", streams=args.streams, audio_s=audio_s,
+                      wall_s=dt, realtime_x=audio_s / dt, fired=len(fired),
+                      keywords=truth, backend=eng.backend_name,
+                      **hop_ms.summary())
     return fired
 
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
+from repro.telemetry import taps as _health
 
 
 def seqlen(cfg) -> int:
@@ -80,14 +81,18 @@ def encode_window(params, x, cfg):
     # it is consumed additively, so integer-resident trees dequantise it
     # in-jit (same po2 de-scale the plan-time dequant would have applied).
     x = jnp.concatenate([cls, x], axis=1) + L.asfloat(params["pos"])
-    for bp in params["blocks"]:
-        # post-norm residual blocks (paper §II eqs 1-6), full attention
-        a, _ = L.apply_attention(bp["attn"], x, cfg,
-                                 positions=jnp.arange(x.shape[1]),
-                                 causal=False)
-        x = L.apply_norm(bp["ln1"], x + a, cfg)
-        f = L.apply_mlp(bp["mlp"], x, cfg)
-        x = L.apply_norm(bp["ln2"], x + f, cfg)
+    _health.tap_activation("embed", x, cfg)
+    for i, bp in enumerate(params["blocks"]):
+        # post-norm residual blocks (paper §II eqs 1-6), full attention;
+        # taps.scope names this block's health stats (block0/softmax ...)
+        with _health.scope(f"block{i}"):
+            a, _ = L.apply_attention(bp["attn"], x, cfg,
+                                     positions=jnp.arange(x.shape[1]),
+                                     causal=False)
+            x = L.apply_norm(bp["ln1"], x + a, cfg)
+            f = L.apply_mlp(bp["mlp"], x, cfg)
+            x = L.apply_norm(bp["ln2"], x + f, cfg)
+            _health.tap_activation("block_out", x, cfg)
     return (L.linear(x[:, 0], params["head_w"], "bd,dc->bc")
             + params["head_b"]).astype(jnp.float32)
 

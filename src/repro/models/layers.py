@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import approx
 from repro.core import quant
+from repro.telemetry import taps as _health
 
 # Mesh axis conventions (see launch/mesh.py):
 FSDP = "data"     # parameter shard axis (ZeRO-3 style)
@@ -251,6 +252,7 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
     """
     b, sq, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    _health.tap_activation("attn_in", x, cfg)
     q = linear(x, p["wq"], "bsd,df->bsf")
     k = linear(x, p["wk"], "bsd,df->bsf")
     v = linear(x, p["wv"], "bsd,df->bsf")
@@ -412,6 +414,7 @@ def mlp_specs(cfg):
 
 
 def apply_mlp(p, x, cfg):
+    _health.tap_activation("mlp_in", x, cfg)
     act = approx.activation(cfg.activation, cfg.act_approx,
                             interpret=cfg.kernel_interpret)
     if cfg.gated_mlp:

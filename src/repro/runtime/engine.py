@@ -35,6 +35,8 @@ from repro.core import lut as lutlib
 from repro.core import quant
 from repro.runtime.backends import Backend, get_backend
 from repro.runtime.recipe import QuantRecipe
+from repro.telemetry import taps as _taps
+from repro.telemetry import trace as _trace
 
 Pytree = Any
 
@@ -72,6 +74,7 @@ class Engine:
     backend: Backend
     recipe: Optional[QuantRecipe]
     quantized_bytes: Optional[tuple] = None   # (int bytes, float bytes)
+    taps: bool = False              # forward also returns quant-health aux
 
     def __post_init__(self):
         self._mod = _model_module(self.exec_cfg)
@@ -79,6 +82,7 @@ class Engine:
         self._forward = jax.jit(lambda p, x: self._mod.forward(p, x, cfg))
         self._embed = self._encode = self._prefill = self._decode = None
         self._stream_steps = {}
+        self._taps_fn = None
         self._unpack = jax.jit(quant.dequantize_tree) \
             if self.int_resident else None
         if cfg.family == "kwt":
@@ -108,8 +112,58 @@ class Engine:
     # -- inference entry points (all jitted, params passed as operands) ----
 
     def forward(self, x):
-        """Offline forward: kwt mfcc [B,F,T] -> logits; LM tokens -> logits."""
-        return self._forward(self.live_params(), x)
+        """Offline forward: kwt mfcc [B,F,T] -> logits; LM tokens -> logits.
+
+        With ``taps`` planned (``compile_model(..., taps=True)``) returns
+        ``(logits, aux)`` where ``aux`` maps tap sites to quantisation-
+        health scalars (telemetry.taps).  Logits always come from the SAME
+        untapped executable either way — bit-identity by construction.
+        """
+        tr = _trace.active_tracer()
+        if tr is None and not self.taps:
+            return self._forward(self.live_params(), x)
+        return self._forward_instrumented(tr, x)
+
+    def _forward_instrumented(self, tr, x):
+        if tr is None:                         # taps only, no tracing
+            lp = self.live_params()
+            return self._forward(lp, x), self._run_taps(lp, x)
+        # Spans measure device work: fence each stage with
+        # block_until_ready (async dispatch is preserved when untraced).
+        with tr.span("forward", {"backend": self.backend.name}):
+            with tr.span("unpack"):
+                lp = jax.block_until_ready(self.live_params())
+            with tr.span("encode"):
+                logits = jax.block_until_ready(self._forward(lp, x))
+            if self.taps:
+                with tr.span("taps"):
+                    aux = jax.block_until_ready(self._run_taps(lp, x))
+                return logits, aux
+        return logits
+
+    def _run_taps(self, lp, x):
+        """The separate jitted aux program of a ``taps=True`` plan.
+
+        Re-traces ``forward`` with the telemetry.taps collector active
+        and returns ONLY the health statistics; served logits never come
+        from this executable.  Keeping the tapped trace out of the
+        serving program is load-bearing for the bit-identity criterion:
+        extra aux outputs change what CPU XLA fuses, which re-tiles
+        reductions and shifts logit rounding (same mechanism the
+        separate unpack stage guards against — see ``live_params``).
+        The cost — a second forward pass — is a diagnostic-mode cost.
+        """
+        if self._taps_fn is None:
+            mod, cfg = self._mod, self.exec_cfg
+
+            def aux_program(p, x):
+                with _taps.collecting() as col:
+                    logits = mod.forward(p, x, cfg)
+                    _taps.tap_activation("logits", logits, cfg)
+                return _taps.pack(col)
+
+            self._taps_fn = jax.jit(aux_program)
+        return self._taps_fn(lp, x)
 
     def embed_frames(self, frames):
         """[B, t, F] time-major frames -> [B, t, d] patch embeddings."""
@@ -132,7 +186,14 @@ class Engine:
             step = jax.jit(lambda p, s, c: stream_engine.stream_step(
                 p, s, c, cfg, fcfg))
             self._stream_steps[fcfg] = step
-        return step(self.live_params(), state, chunk)
+        tr = _trace.active_tracer()
+        if tr is None:
+            return step(self.live_params(), state, chunk)
+        with tr.span("stream_step", {"backend": self.backend.name}):
+            with tr.span("unpack"):
+                lp = jax.block_until_ready(self.live_params())
+            with tr.span("hop"):
+                return jax.block_until_ready(step(lp, state, chunk))
 
     # -- LM serving entry points ------------------------------------------
 
@@ -144,14 +205,28 @@ class Engine:
             cfg = self.exec_cfg
             self._prefill = jax.jit(
                 lambda p, t, s: self._mod.prefill(p, t, cfg, s))
-        return self._prefill(self.live_params(), tokens, state)
+        tr = _trace.active_tracer()
+        if tr is None:
+            return self._prefill(self.live_params(), tokens, state)
+        with tr.span("prefill", {"backend": self.backend.name}):
+            with tr.span("unpack"):
+                lp = jax.block_until_ready(self.live_params())
+            with tr.span("encode"):
+                return jax.block_until_ready(self._prefill(lp, tokens, state))
 
     def decode_step(self, token, state):
         if self._decode is None:
             cfg = self.exec_cfg
             self._decode = jax.jit(
                 lambda p, t, s: self._mod.decode_step(p, t, cfg, s))
-        return self._decode(self.live_params(), token, state)
+        tr = _trace.active_tracer()
+        if tr is None:
+            return self._decode(self.live_params(), token, state)
+        with tr.span("decode_step", {"backend": self.backend.name}):
+            with tr.span("unpack"):
+                lp = jax.block_until_ready(self.live_params())
+            with tr.span("encode"):
+                return jax.block_until_ready(self._decode(lp, token, state))
 
     # -- introspection -----------------------------------------------------
 
@@ -252,7 +327,8 @@ def compile_model(cfg, params, backend="float",
                   recipe: QuantRecipe | None = None,
                   interpret: bool | None = None,
                   attention: str | None = None,
-                  integer_resident: bool | None = None) -> Engine:
+                  integer_resident: bool | None = None,
+                  taps: bool = False) -> Engine:
     """Plan execution of ``params`` under ``backend``.
 
     ``recipe=None`` -> the backend's default policy: quantising backends
@@ -277,6 +353,13 @@ def compile_model(cfg, params, backend="float",
     through the flash-LUT Pallas kernel (``kernels.lut_attention`` —
     online softmax with the eq-11 ROM), ``"xla"`` keeps the chunked sdpa
     path.
+
+    ``taps=True`` plans the quantisation-health aux: ``forward`` returns
+    ``(logits, aux)`` where aux carries per-layer int8 saturation, LUT
+    out-of-domain fractions and Q8.24 headroom (telemetry.taps).  Logits
+    are served by the same untapped executable as a ``taps=False`` plan
+    (bit-identical); taps off costs nothing (the flag is a plain Python
+    branch, no recompile).
     """
     be = get_backend(backend)
     pre_quantized = _has_qtensors(params)
@@ -293,4 +376,4 @@ def compile_model(cfg, params, backend="float",
         params = qtree if resident else quant.dequantize_tree(qtree)
     exec_cfg = be.configure(cfg, interpret=interpret, attention=attention)
     return Engine(cfg=cfg, exec_cfg=exec_cfg, params=params, backend=be,
-                  recipe=recipe, quantized_bytes=qbytes)
+                  recipe=recipe, quantized_bytes=qbytes, taps=taps)

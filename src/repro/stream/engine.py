@@ -27,6 +27,7 @@ from repro.dist import ctx
 from repro.models import kwt
 from repro.stream import features
 from repro.stream import ring
+from repro.telemetry import annotate
 
 
 def window_frames(cfg) -> int:
@@ -60,12 +61,17 @@ def stream_step(params, state: dict, chunk: jnp.ndarray, cfg,
     :func:`warm` is True for the lane (a full receptive field of real
     frames); before that the window still contains init zeros.
     """
-    fe, frames = features.frontend_push(state["frontend"], chunk, fcfg)
+    # named_scope stages (telemetry.annotate) are metadata-only: they name
+    # the featurise/embed/encode regions in jaxprs and XLA profiles without
+    # touching numerics or fusion decisions.
+    with annotate("featurise"):
+        fe, frames = features.frontend_push(state["frontend"], chunk, fcfg)
     new = {"frontend": fe}
     if "feat" in state:
         new["feat"] = ring.ring_push(state["feat"], frames)
-    emb = ring.ring_push(state["embed"],
-                         kwt.embed_frames(params, frames, cfg))
+    with annotate("embed"):
+        emb = ring.ring_push(state["embed"],
+                             kwt.embed_frames(params, frames, cfg))
     new["embed"] = emb
     # barrier: the encoder must see only the assembled [B, T, d] window, not
     # the hop-sized producers — otherwise XLA fuses frontend/ring ops into
@@ -75,7 +81,8 @@ def stream_step(params, state: dict, chunk: jnp.ndarray, cfg,
     # under launch/stream_serve.py's mesh (exact no-op off-mesh).
     window = jax.lax.optimization_barrier(
         ctx.shard_activations(ring.ring_window(emb)))
-    logits = kwt.encode_window(params, window, cfg)
+    with annotate("encode"):
+        logits = kwt.encode_window(params, window, cfg)
     return new, logits
 
 

@@ -1,0 +1,164 @@
+"""In-graph quantisation-health taps (the ``compile_model(taps=True)`` aux).
+
+A *tap* is a scalar health statistic computed inside the jitted forward
+from a tensor the plan already materialises — the numbers that tell you
+whether the paper's fixed-point pipeline is running inside its numeric
+envelope:
+
+* ``int8_sat_frac``   — fraction of activation values that would clip at
+  the int8 edge under the plan's eq-9 input grid (``x * 2^e_in`` vs
+  ±127).  Rising saturation means the Table V input exponent is too hot
+  for this data.
+* ``q24_headroom_bits`` — integer bits to spare before ``|x|`` reaches
+  the Q8.24 representable edge (128).  Negative: ``ALU_TO_FIXED`` is
+  saturating.
+* ``lut_oob_frac``    — fraction of lanes hitting a LUT domain clip:
+  softmax ``max(x) - x_i > 10`` (the eq-11 table edge, where the paper's
+  pipeline silently leaks ``e^{-10}``), GELU inputs outside
+  [-1.857, 1.595] (exact-tail region — benign, but drift here tracks
+  activation-scale drift).
+* ``q24_sum_headroom_bits`` — int32 bits to spare in the fixed softmax's
+  numerator accumulator (the §VI overflow guard the pre-shift protects).
+
+Collection protocol: model code calls :func:`tap_activation` /
+:func:`tap_softmax` / :func:`tap_gelu` unconditionally — with no active
+collector these return immediately (one module-global ``None`` check at
+*trace* time, nothing in the compiled program), so the untapped plan's
+jaxpr is byte-identical with or without this module imported.  The
+Engine's taps program wraps its forward trace in :func:`collecting` and
+returns :func:`pack` of what accumulated; :func:`scope` prefixes names
+(``block0/softmax``) so per-layer stats stay distinguishable.
+
+The stat math intentionally *re-derives* cheap elementwise stages
+(max-subtract, table index) from the tapped tensor rather than plumbing
+intermediates out of ``core.approx``'s STE-wrapped primals: a tap inside
+a ``custom_vjp`` primal would leak its trace's tracers into the aux
+output.  The formulas mirror ``approx.softmax_lut`` / ``gelu_lut``
+line-for-line.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.core import lut as lutlib
+
+_ACTIVE: list | None = None
+_SCOPE: list[str] = []
+
+_Q24_EPS = 2.0 ** -24
+
+
+def active() -> bool:
+    return _ACTIVE is not None
+
+
+@contextlib.contextmanager
+def collecting():
+    """Route taps emitted while tracing into a fresh collector list."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, []
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    """Prefix taps emitted inside with ``<name>/`` (per-layer naming)."""
+    if _ACTIVE is None:
+        yield
+        return
+    _SCOPE.append(name)
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def _emit(site: str, stats: dict):
+    _ACTIVE.append(("/".join(_SCOPE + [site]), stats))
+
+
+def _headroom_bits(maxabs, edge_bits: int):
+    """Bits to spare before ``maxabs`` reaches ``2^edge_bits``."""
+    return (float(edge_bits)
+            - jnp.ceil(jnp.log2(jnp.maximum(maxabs, _Q24_EPS))))
+
+
+def tap_activation(site: str, x, cfg):
+    """int8-grid saturation + Q8.24 headroom of one activation tensor."""
+    if _ACTIVE is None:
+        return
+    q = getattr(cfg, "quant", None)
+    e_in = q.input_exponent if q is not None else 5
+    absx = jnp.abs(x.astype(jnp.float32))
+    hi = 2.0 ** 7 - 1                       # int8 clip edge on the input grid
+    sat = jnp.mean((absx * (2.0 ** e_in) >= hi).astype(jnp.float32))
+    _emit(site, {"int8_sat_frac": sat,
+                 "q24_headroom_bits": _headroom_bits(jnp.max(absx), 7)})
+
+
+def tap_softmax(scores, mask=None, *, fixed: bool = False):
+    """LUT exp out-of-domain fraction (+ Q8.24 accumulator headroom when
+    the fixed pipeline runs) for one softmax's score tensor."""
+    if _ACTIVE is None:
+        return
+    s = scores.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    sm = s if mask is None else jnp.where(mask, s, neg)
+    z = jnp.max(sm, axis=-1, keepdims=True) - s       # >= 0 on valid lanes
+    oob = (z > lutlib.EXP_RANGE)
+    if mask is not None:
+        valid = jnp.broadcast_to(mask, z.shape)
+        n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+        frac = jnp.sum(jnp.logical_and(oob, valid).astype(jnp.float32)) \
+            / n_valid
+    else:
+        frac = jnp.mean(oob.astype(jnp.float32))
+    stats = {"lut_oob_frac": frac}
+    if fixed:
+        # mirror of approx.masked_softmax's lut_fixed accumulator: numerators
+        # from the eq-11 ROM, pre-shifted so the int32 row sum cannot wrap.
+        bank = lutlib.make_lut_bank()
+        zc = jnp.clip(z, 0.0, lutlib.EXP_RANGE)
+        num_q = jnp.take(jnp.asarray(bank.exp_q24),
+                         lutlib.exp_index_from_q24(fxp.to_fixed(zc)))
+        if mask is not None:
+            num_q = jnp.where(jnp.broadcast_to(mask, num_q.shape), num_q, 0)
+        import numpy as np
+        k_len = s.shape[-1]
+        pre = max(0, int(np.ceil(np.log2(max(k_len, 1)))) - 6)
+        if pre > 0:
+            num_q = (num_q + (1 << (pre - 1))) >> pre
+        s_q = jnp.sum(num_q, axis=-1)
+        max_sq = jnp.maximum(jnp.max(s_q).astype(jnp.float32), 1.0)
+        stats["q24_sum_headroom_bits"] = \
+            31.0 - jnp.ceil(jnp.log2(max_sq))
+    _emit("softmax", stats)
+
+
+def tap_gelu(x):
+    """Fraction of GELU inputs outside the 32-entry table's [LO, HI]."""
+    if _ACTIVE is None:
+        return
+    xf = x.astype(jnp.float32)
+    out = jnp.logical_or(xf > lutlib.GELU_HI, xf < lutlib.GELU_LO)
+    _emit("gelu", {"lut_oob_frac": jnp.mean(out.astype(jnp.float32))})
+
+
+def pack(collected: list) -> dict:
+    """Collector list -> ``{name: {stat: scalar}}`` with unique names
+    (repeat sites outside any scope get ``#<k>`` suffixes)."""
+    out: dict = {}
+    for name, stats in collected:
+        key, k = name, 1
+        while key in out:
+            key = f"{name}#{k}"
+            k += 1
+        out[key] = stats
+    return out
