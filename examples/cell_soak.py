@@ -1,0 +1,187 @@
+"""Cell soak: lane churn + in-flight QAT-artifact hot-swap, zero drops.
+
+The CI smoke for ``repro.cell`` (README §repro.cell).  One process plays
+the whole fleet lifecycle:
+
+1. train a float KWT-Tiny briefly, QAT fine-tune, and EXPORT the packed
+   int8 artifact (``repro.qat.export``) — the serving cell boots on it
+   (``lut`` backend, integer-resident weights);
+2. serve ``--streams`` synthetic keyword streams of random lengths
+   through a ``ServeCell`` with fewer lanes than streams, so lanes churn
+   (join/evict mid-run) the whole time;
+3. one third of the way in, QAT fine-tunes a few MORE steps and
+   publishes the fresh export through ``checkpoint.manager`` into the
+   cell's watch directory; the cell's watcher picks it up mid-traffic
+   and hot-swaps it behind the probe-parity gate;
+4. exit non-zero unless: the swap happened (generation bumped), post-swap
+   probe logits are bit-identical to the dequantise-first reference plan
+   of the same artifact, every admitted stream ran to completion, and
+   the ingested-hop ledger reconciles EXACTLY with the offered source
+   hops (``cell_hops_total`` == sum of stream lengths, zero drops across
+   churn and the swap).
+
+Run:  PYTHONPATH=src python examples/cell_soak.py [--streams 10]
+          [--slots 4] [--telemetry-out soak_trace.json]
+"""
+
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import cell as cellmod
+from repro import qat, runtime, telemetry
+from repro.checkpoint import manager
+from repro.configs import registry
+from repro.data import pipeline
+from repro.launch import serve_common
+from repro.launch.stream_serve import train_params
+from repro.stream import detector as det
+from repro.stream import features
+
+
+def qat_artifact(cfg, params, steps, seed):
+    """A few QAT steps + export: the packed int8 deploy artifact."""
+    spec = qat.QATSpec(recipe=runtime.QuantRecipe.from_config(cfg))
+    params, qstate = qat.finetune_qat(cfg, params, spec, steps, seed=seed)
+    return qat.export(params, spec, qstate), params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--hops", type=int, default=40,
+                    help="mean stream length in hops")
+    ap.add_argument("--train-steps", type=int, default=25)
+    ap.add_argument("--qat-steps", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    serve_common.add_telemetry_args(ap)
+    args = ap.parse_args()
+
+    cfg = registry.get("kwt-tiny").smoke
+    fcfg = features.FrontendConfig()
+    dcfg = det.DetectorConfig()
+
+    # [1] train + QAT-export the boot artifact; the cell serves the packed
+    # tree integer-resident on the lut backend
+    fparams = train_params(cfg, fcfg, args.train_steps, args.seed)
+    ex1, fparams = qat_artifact(cfg, fparams, args.qat_steps, args.seed)
+    eng = runtime.compile_model(cfg, ex1.qparams, backend="lut")
+    assert eng.int_resident, "soak must serve the packed artifact"
+    telemetry.log("engine", plan=eng.describe())
+
+    rng = np.random.RandomState(args.seed)
+    sources = {}
+    for sid in range(args.streams):
+        hops = int(rng.randint(max(args.hops // 2, 2), args.hops * 2))
+        audio, events = pipeline.keyword_event_stream(
+            args.seed, sid, n_hops=hops, hop_len=fcfg.hop_len)
+        sources[sid] = {"audio": audio, "hops": hops}
+    offered_hops = sum(s["hops"] for s in sources.values())
+
+    watch_dir = tempfile.mkdtemp(prefix="cell_soak_ckpt_")
+    probe = np.zeros((1,) + tuple(cfg.input_dim), np.float32)
+    publish_after = offered_hops // 3
+    B = args.slots
+
+    with serve_common.session(args.telemetry_out) as (tracer, met):
+        cell = cellmod.ServeCell(
+            eng, slots=B, registry=met,
+            admission=cellmod.AdmissionConfig(max_queue=args.streams),
+            watch_dir=watch_dir, watch_like=ex1.qparams,
+            probe=jnp.asarray(probe))
+        with cell:
+            lanes = cell.stream_lanes(fcfg, dcfg)
+            for sid in sources:
+                assert cell.admission.offer(sid).admitted
+            active = [None] * B
+            offset = np.zeros(B, np.int64)
+            done, published = [], False
+            while len(done) < args.streams:
+                swapped = cell.maybe_swap()
+                if swapped:
+                    telemetry.log("soak_swap",
+                                  generation=cell.handle.generation,
+                                  mid_serve_lanes=lanes.n_active)
+                for lane in lanes.free_lanes():
+                    sid = cell.admission.pop()
+                    if sid is None:
+                        break
+                    lanes.join(lane)
+                    active[lane], offset[lane] = sid, 0
+                if not published and met.counter(
+                        "cell_hops_total").value >= publish_after:
+                    # [3] fresh QAT export published mid-traffic
+                    ex2, _ = qat_artifact(cfg, fparams, args.qat_steps,
+                                          args.seed + 1)
+                    manager.save(watch_dir, 2, ex2.qparams)
+                    published = True
+                    telemetry.log("soak_publish", step=2,
+                                  rom_bytes=ex2.quantized_bytes[0])
+                cs = lanes.chunk_samples
+                chunk = np.zeros((B, cs), np.float32)
+                ingest = np.zeros(B, np.int64)
+                for i in range(B):
+                    sid = active[i]
+                    if sid is None:
+                        continue
+                    a = sources[sid]["audio"]
+                    end = sources[sid]["hops"] * fcfg.hop_len
+                    n = int(min(cs, end - offset[i]))
+                    chunk[i, :n] = a[offset[i]:offset[i] + n]
+                    offset[i] += n
+                    ingest[i] = n // fcfg.hop_len
+                lanes.hop(chunk, ingest=ingest)
+                for i in range(B):
+                    sid = active[i]
+                    if sid is not None and \
+                            offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
+                        done.append(sid)
+                        lanes.evict(i)
+                        active[i] = None
+
+            # [4] the acceptance ledger
+            m = cell.metrics
+            failures = []
+            if cell.handle.generation != 1 or m.swaps.value != 1:
+                failures.append(
+                    f"expected exactly one hot-swap, got generation="
+                    f"{cell.handle.generation} swaps={m.swaps.value}")
+            if m.swap_failures.value:
+                failures.append(f"{m.swap_failures.value} swaps rejected")
+            got = np.asarray(cell.engine.forward(jnp.asarray(probe)))
+            _, q2 = None, manager.restore(watch_dir, 2, ex1.qparams)
+            ref = runtime.compile_model(cfg, q2, backend="lut",
+                                        integer_resident=False)
+            if not np.array_equal(got,
+                                  np.asarray(ref.forward(jnp.asarray(probe)))):
+                failures.append("post-swap probe logits diverge from the "
+                                "dequantise-first reference")
+            if int(m.hops.value) != offered_hops or m.dropped_hops.value:
+                failures.append(
+                    f"hop ledger: ingested {int(m.hops.value)} != offered "
+                    f"{offered_hops} (dropped={m.dropped_hops.value})")
+            if len(done) != args.streams or m.evictions.value != args.streams:
+                failures.append(f"{len(done)}/{args.streams} streams done, "
+                                f"{m.evictions.value} evictions")
+        telemetry.log("soak_done", streams=args.streams,
+                      hops=int(m.hops.value), swaps=int(m.swaps.value),
+                      generation=cell.handle.generation,
+                      failures=len(failures))
+    for f in failures:
+        print("FAIL:", f)
+    if failures:
+        sys.exit(1)
+    print(f"cell soak OK: {args.streams} streams over {B} lanes, "
+          f"{offered_hops} hops ingested with zero drops, one hot-swap "
+          "mid-traffic with bit-identical probe parity")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""repro.cell — the serving cell: everything between a request and an
+Engine.
+
+* :mod:`repro.cell.scheduler` — continuous batching for LM lanes:
+  per-lane decode depth, in-flight join via fresh-prefill + per-lane
+  state merge, per-slot EOS/evict, no drain barrier.
+* :mod:`repro.cell.admission` — bounded queues, token-bucket rate
+  limiting, deadline shedding, and the cell-wide chunk-hops degrade
+  stage, every decision a ``cell_admission_total`` counter.
+* :mod:`repro.cell.pipeline`  — the featurise/encode split of the
+  streaming hop with async double-buffered dispatch, bit-identical to
+  the fused ``stream_step`` per backend.
+* :mod:`repro.cell.hotswap`   — checkpoint-watching hot-swap: load a
+  freshly published packed artifact, warm it, gate it on probe-logit
+  parity, install it atomically without dropping lanes.
+* :mod:`repro.cell.cell`      — :class:`ServeCell` composing the above
+  over one host's ``dist.ctx`` mesh; both serve launchers are thin CLIs
+  over it.
+
+See README §repro.cell.
+"""
+
+from repro.cell.admission import (AdmissionConfig, AdmissionController,
+                                  Decision)
+from repro.cell.cell import ServeCell, StreamLanes
+from repro.cell.hotswap import (CheckpointWatcher, SwapRejected, hot_swap,
+                                poll_and_swap)
+from repro.cell.pipeline import HopPipeline
+from repro.cell.scheduler import LMScheduler, Request, TokenEvent
+
+__all__ = ["AdmissionConfig", "AdmissionController", "CheckpointWatcher",
+           "Decision", "HopPipeline", "LMScheduler", "Request", "ServeCell",
+           "StreamLanes", "SwapRejected", "TokenEvent", "hot_swap",
+           "poll_and_swap"]

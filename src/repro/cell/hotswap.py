@@ -1,0 +1,148 @@
+"""Checkpoint-watching hot-swap: new weights without dropping a lane.
+
+The eval-side checkpoint loop (retrieve latest step / wait for a new
+step / load for step) pointed at a directory where training (or QAT
+export) publishes packed artifacts through ``checkpoint.manager`` —
+atomic tmp+rename, so the watcher only ever sees complete steps.
+
+A swap is a four-stage transaction (``hot_swap``):
+
+1. **load**  — ``manager.restore`` reads the step's pytree (typically a
+   packed QTensor tree straight from ``qat.export``) against a
+   structure template and ``runtime.compile_model`` plans it under the
+   SAME backend as the serving engine.
+2. **warm**  — the probe batch runs through the new engine's entry
+   points, forcing compile + first-touch off the serving path.
+3. **verify** — the parity gate: the new plan's probe logits must be
+   ``array_equal`` to a dequantise-first reference plan of the SAME
+   artifact (the integer-residency bit-identity invariant, restated as
+   a deploy gate).  A corrupted artifact or a broken plan fails CLOSED:
+   the cell keeps serving the old engine.
+4. **swap** — ``EngineHandle.swap`` installs the engine atomically
+   under the handle's lock.  Lane state (rings, detector state, KV
+   caches) lives outside the Engine and the exec config is unchanged by
+   contract, so in-flight lanes continue on the same compiled serving
+   programs with new params — no hop is dropped, no recompile.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro import runtime
+from repro.checkpoint import manager
+from repro.telemetry import log as _log
+
+
+class SwapRejected(RuntimeError):
+    """The parity gate refused the new artifact; the old engine serves on."""
+
+
+class CheckpointWatcher:
+    """Polls a checkpoint directory for steps newer than the last seen.
+
+    ``clock``/``sleep`` are injectable so waiting is unit-testable.
+    """
+
+    def __init__(self, ckpt_dir: str, *, poll_s: float = 0.5,
+                 clock=time.monotonic, sleep=time.sleep):
+        self.ckpt_dir = ckpt_dir
+        self.poll_s = poll_s
+        self._clock, self._sleep = clock, sleep
+        self.last_step: Optional[int] = None
+
+    def retrieve_latest_step(self) -> Optional[int]:
+        """Newest COMPLETE step on disk (partial writes are invisible:
+        manager.latest_step skips tmp dirs and manifest-less stragglers)."""
+        return manager.latest_step(self.ckpt_dir)
+
+    def poll(self) -> Optional[int]:
+        """A step newer than the last seen, or None. Non-blocking."""
+        step = self.retrieve_latest_step()
+        if step is not None and (self.last_step is None
+                                 or step > self.last_step):
+            return step
+        return None
+
+    def wait_for_new_step(self, timeout_s: Optional[float] = None
+                          ) -> Optional[int]:
+        """Block (poll/sleep) until a new step appears; None on timeout."""
+        t0 = self._clock()
+        while True:
+            step = self.poll()
+            if step is not None:
+                return step
+            if timeout_s is not None and self._clock() - t0 >= timeout_s:
+                return None
+            self._sleep(self.poll_s)
+
+    def load_for_step(self, step: int, like: Any) -> Any:
+        """Read step's pytree against the ``like`` structure template and
+        mark the step consumed."""
+        tree = manager.restore(self.ckpt_dir, step, like)
+        self.last_step = step
+        return tree
+
+
+def hot_swap(handle: "runtime.EngineHandle", params: Any, probe,
+             *, metrics=None, strict: bool = True) -> "runtime.Engine":
+    """Plan ``params`` under the handle's current backend, warm it, gate
+    it on probe parity, and install it.  Returns the REPLACED engine.
+
+    ``probe`` is a small representative input batch (mfcc for kwt,
+    tokens for LMs).  Raises :class:`SwapRejected` (engine untouched)
+    when the parity gate fails; propagates ``EngineHandle.swap``'s
+    ``ValueError`` on exec-config/shape mismatch when ``strict``.
+    """
+    old = handle.engine
+    t0 = time.perf_counter()
+    new = runtime.compile_model(old.cfg, params, backend=old.backend_name)
+    got = jax.block_until_ready(new.forward(probe))         # warm + compile
+    if new.int_resident:
+        # the PR-5 invariant as a deploy gate: the packed-resident plan
+        # must reproduce the dequantise-first plan of the SAME artifact
+        ref = runtime.compile_model(old.cfg, params,
+                                    backend=old.backend_name,
+                                    integer_resident=False)
+        want = jax.block_until_ready(ref.forward(probe))
+        if not np.array_equal(np.asarray(got), np.asarray(want)):
+            if metrics is not None:
+                metrics.swap_failures.inc()
+            raise SwapRejected(
+                "probe logits of the integer-resident plan diverge from "
+                "the dequantise-first reference — artifact refused, old "
+                "engine keeps serving")
+    try:
+        replaced = handle.swap(new, strict=strict)
+    except ValueError:
+        if metrics is not None:
+            metrics.swap_failures.inc()
+        raise
+    dt_ms = 1e3 * (time.perf_counter() - t0)
+    if metrics is not None:
+        metrics.swaps.inc()
+        metrics.swap_ms.observe(dt_ms)
+        metrics.engine_generation.set(handle.generation)
+    _log("hot_swap", generation=handle.generation, ms=dt_ms,
+         backend=new.backend_name, resident=new.int_resident)
+    return replaced
+
+
+def poll_and_swap(handle, watcher: CheckpointWatcher, like: Any, probe,
+                  *, metrics=None) -> bool:
+    """One non-blocking watch tick for a serving loop: if a new complete
+    step landed, load + hot-swap it.  Returns True when a swap happened.
+    A rejected artifact is consumed (no retry storm) but not installed."""
+    step = watcher.poll()
+    if step is None:
+        return False
+    params = watcher.load_for_step(step, like)
+    try:
+        hot_swap(handle, params, probe, metrics=metrics)
+    except SwapRejected:
+        return False
+    return True

@@ -1,0 +1,112 @@
+"""Async double-buffered hop pipelining: featurise t+1 under encode t.
+
+``stream.engine.stream_step`` is one fused jit per hop: featurise ->
+embed -> ring -> encode.  The cell splits it at the existing
+optimization-barrier seam into TWO jitted programs,
+
+* ``featurise``: frontend_push + embed_frames + ring pushes -> the
+  assembled [B, T, d] window (everything that depends on hop t's audio),
+* ``encode``: window -> logits (the heavy encoder),
+
+and exploits JAX's async dispatch: the host enqueues ``featurise`` for
+hop t+1 immediately after enqueuing ``encode`` for hop t — never
+blocking between them — so the feature front runs ahead of the encoder
+by one hop (double buffering; chunks are staged with ``jax.device_put``
+so the H2D copy also overlaps, and on backends that support it the state
+buffers are donated).
+
+Bit-identity comes for free: the pipelined path runs the SAME two
+executables in the same per-lane order as the synchronous reference
+(``step``), so their logits are equal by construction; and because the
+split point is exactly the barrier ``stream_step`` already places before
+its encoder, the split path reproduces the fused ``stream_step`` logits
+bit-for-bit on every backend (tests/test_cell.py asserts both).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models import kwt
+from repro.stream import engine as stream_engine
+from repro.stream import features
+from repro.stream import ring
+
+
+class HopPipeline:
+    """The featurise/encode split of one engine's streaming plan.
+
+    ``engine`` is a ``runtime.Engine`` or ``EngineHandle``; programs
+    close over the plan's ``exec_cfg`` and take params as operands, so a
+    hot-swap between hops needs no recompile.
+    """
+
+    def __init__(self, engine, fcfg: features.FrontendConfig,
+                 keep_features: bool = False, donate: bool | None = None):
+        eng = engine.engine if hasattr(engine, "engine") else engine
+        cfg = eng.exec_cfg
+        assert cfg.family == "kwt", "hop pipelining drives the KWT family"
+        self._eng_ref = engine
+        self.cfg, self.fcfg = cfg, fcfg
+        self.keep_features = keep_features
+        if donate is None:
+            # CPU jax ignores donation with a warning; stay quiet there
+            donate = jax.default_backend() != "cpu"
+
+        def featurise(params, state, chunk):
+            fe, frames = features.frontend_push(state["frontend"], chunk,
+                                                fcfg)
+            new = {"frontend": fe,
+                   "embed": ring.ring_push(
+                       state["embed"],
+                       kwt.embed_frames(params, frames, cfg))}
+            if "feat" in state:
+                new["feat"] = ring.ring_push(state["feat"], frames)
+            # the same seam stream_step fences: the encoder consumes only
+            # the assembled window, never the hop-sized producers
+            window = jax.lax.optimization_barrier(
+                ctx.shard_activations(ring.ring_window(new["embed"])))
+            return new, window
+
+        self._feat = jax.jit(featurise,
+                             donate_argnums=(1,) if donate else ())
+        self._enc = jax.jit(lambda p, w: kwt.encode_window(p, w, cfg))
+
+    def _params(self):
+        ref = self._eng_ref
+        return ref.live_params()
+
+    def init_state(self, batch: int) -> dict:
+        return stream_engine.init_stream_state(
+            self.cfg, self.fcfg, batch, keep_features=self.keep_features)
+
+    # -- synchronous reference --------------------------------------------
+
+    def step(self, state, chunk):
+        """One hop through the split programs: (state, chunk) ->
+        (state, logits).  Logits are bit-identical to
+        ``Engine.stream_step`` on the same chunk sequence."""
+        p = self._params()
+        state, window = self._feat(p, state, jnp.asarray(chunk))
+        return state, self._enc(p, window)
+
+    # -- pipelined loop ----------------------------------------------------
+
+    def run(self, state, chunks):
+        """Stream ``chunks`` with one-hop lookahead; yields
+        ``(state_t, logits_t)`` per hop, dispatch order
+        ``feat(0), enc(0), feat(1), enc(1), ...`` with NO host sync —
+        while the device executes ``enc(t)``, the host is already
+        staging chunk t+1 (``device_put``) and enqueuing ``feat(t+1)``.
+
+        The yielded logits are live device arrays: a consumer that
+        blocks on them immediately re-serialises the pipeline; batch a
+        few hops (or poll) to keep the lookahead.
+        """
+        p = self._params()
+        for chunk in chunks:
+            staged = jax.device_put(jnp.asarray(chunk))
+            state, window = self._feat(p, state, staged)
+            yield state, self._enc(p, window)

@@ -72,15 +72,39 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True):
     return t
 
 
+def is_complete(ckpt_dir: str, step: int) -> bool:
+    """True iff the step's directory is a fully materialised checkpoint
+    (manifest parses, payload shard present) — what a watcher may load."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, _SENTINEL)) as f:
+            json.load(f)
+    except (OSError, ValueError):
+        return False
+    return os.path.exists(os.path.join(d, "shard_0.npz"))
+
+
 def latest_step(ckpt_dir: str) -> int | None:
-    """Newest step with a *complete* (renamed, manifest-bearing) checkpoint."""
+    """Newest step with a *complete* checkpoint.
+
+    Built for being polled while writers race (``cell.hotswap``): the
+    atomic tmp+rename protocol means anything this returns is loadable,
+    and anything else in the directory — in-flight ``.tmp-*`` dirs,
+    unparsable names, manifest-less or payload-less stragglers from an
+    external partial copy — is SKIPPED, never an exception.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and ".tmp" not in name and \
-                os.path.exists(os.path.join(ckpt_dir, name, _SENTINEL)):
-            steps.append(int(name.split("_")[1]))
+        if not name.startswith("step_") or ".tmp" in name:
+            continue
+        try:
+            step = int(name.split("_")[1])
+        except ValueError:          # step_garbage, step_ etc.
+            continue
+        if is_complete(ckpt_dir, step):
+            steps.append(step)
     return max(steps) if steps else None
 
 

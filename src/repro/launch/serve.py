@@ -1,9 +1,12 @@
-"""Batched serving launcher (continuous-batching-lite).
+"""Batched LM serving launcher: a thin CLI over ``repro.cell``.
 
-A fixed pool of batch slots; each slot holds one request (prompt len,
-target gen len).  Finished slots are immediately refilled from the queue —
-the decode step always runs at full batch.  Prefill is chunked (hybrid
-ring caches are filled window-aligned, <= Q_CHUNK tokens per chunk).
+Continuous batching proper (``cell.scheduler.LMScheduler``): a fixed
+pool of batch slots where new requests prefill into free lanes WHILE
+resident lanes keep decoding — per-lane decode depths, per-slot
+EOS/evict, no drain barrier.  (The previous slot loop re-initialised the
+whole decode state on every refill, wiping resident lanes' KV caches
+mid-request; the scheduler's fresh-prefill + per-lane merge is the fix,
+and tests/test_cell.py pins the resident-preservation property.)
 
 Execution policy is one flag: ``--backend float|lut_float|lut|pallas``
 resolves through ``runtime.compile_model`` to an Engine that owns the
@@ -18,18 +21,17 @@ Usage (CPU, reduced config):
 
 from __future__ import annotations
 
-import argparse
 import time
 
+import argparse
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import cell as cellmod
 from repro import runtime
 from repro import telemetry
 from repro.configs import registry
-from repro.dist import ctx
-from repro.launch import mesh as meshlib
 from repro.launch import serve_common
 from repro.launch import steps
 
@@ -45,92 +47,44 @@ def main(argv=None):
                     choices=runtime.available_backends(),
                     help="execution backend (runtime.compile_model); "
                          "the former --quantize flag is --backend lut_float")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="evict a lane early when it emits this token")
     ap.add_argument("--seed", type=int, default=0)
     serve_common.add_telemetry_args(ap)
     args = ap.parse_args(argv)
-    backend = args.backend
 
     entry = registry.get(args.arch)
     cfg = entry.smoke if args.smoke else entry.config
-    mesh = meshlib.make_host_mesh()
     mod = steps.model_module(cfg)
     assert cfg.family != "encdec", "use whisper_serve example for enc-dec"
 
     rng = np.random.RandomState(args.seed)
-    queue = [{"id": i,
-              "prompt": rng.randint(0, cfg.vocab_size,
-                                    size=rng.randint(4, args.max_len // 4)),
-              "gen": int(rng.randint(4, args.max_len // 2))}
-             for i in range(args.requests)]
+    requests = [{"id": i,
+                 "prompt": rng.randint(0, cfg.vocab_size,
+                                       size=rng.randint(4,
+                                                        args.max_len // 4)),
+                 "gen": int(rng.randint(4, args.max_len // 2))}
+                for i in range(args.requests)]
 
-    with serve_common.session(args.telemetry_out) as (tracer, met), \
-            mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
+    with serve_common.session(args.telemetry_out) as (tracer, met):
         params = mod.init_params(cfg, jax.random.PRNGKey(args.seed))
-        eng = runtime.compile_model(cfg, params, backend=backend)
+        eng = runtime.compile_model(cfg, params, backend=args.backend)
         telemetry.log("engine", plan=eng.describe())
-
-        prefill_ms = met.histogram("serve_prefill_latency_ms",
-                                   "batched prompt prefill wall time",
-                                   unit="ms")
-        decode_ms = met.histogram("serve_decode_latency_ms",
-                                  "decode step wall time", unit="ms")
-        occupancy = met.gauge("serve_lane_occupancy",
-                              "active slots / batch slots")
-        qdepth = met.gauge("serve_queue_depth", "requests waiting for a slot")
-        refill_ctr = met.counter("serve_lane_refills_total",
-                                 "slot refill operations")
-        tokens_ctr = met.counter("serve_tokens_total", "tokens decoded")
-
-        B = args.slots
-        state = eng.init_decode_state(B, args.max_len)
-
-        # per-slot bookkeeping (host side)
-        active = [None] * B
-        remaining = np.zeros(B, np.int32)
-        done, t0, decoded = [], time.time(), 0
-        cur = jnp.zeros((B,), jnp.int32)
-
-        while len(done) < args.requests:
-            # refill empty slots -> batch prefill of their prompts together
-            # (at most len(queue): free slots can outnumber waiting requests)
-            refills = [i for i in range(B) if active[i] is None][:len(queue)]
-            if refills:
-                # pad prompts to common length, run one batched prefill
-                reqs = [queue.pop(0) for _ in refills]
-                plen = max(len(r["prompt"]) for r in reqs)
-                toks = np.zeros((B, plen), np.int32)
-                for i, r in zip(refills, reqs):
-                    toks[i, -len(r["prompt"]):] = r["prompt"]
-                    active[i] = r
-                    remaining[i] = r["gen"]
-                refill_ctr.inc(len(refills))
-                state = eng.init_decode_state(B, args.max_len)
-                t_pf = time.perf_counter()
-                logits, state = eng.prefill(jnp.asarray(toks), state)
-                logits = jax.block_until_ready(logits)
-                prefill_ms.observe(1e3 * (time.perf_counter() - t_pf))
-                cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            occupancy.set(sum(1 for a in active if a is not None) / B)
-            qdepth.set(len(queue))
-            t_dc = time.perf_counter()
-            logits, state = eng.decode_step(cur, state)
-            logits = jax.block_until_ready(logits)
-            decode_ms.observe(1e3 * (time.perf_counter() - t_dc))
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            n_active = int(sum(1 for i in range(B) if active[i]))
-            decoded += n_active
-            tokens_ctr.inc(n_active)
-            for i in range(B):
-                if active[i] is None:
-                    continue
-                remaining[i] -= 1
-                if remaining[i] <= 0:
-                    done.append(active[i]["id"])
-                    active[i] = None
+        cell = cellmod.ServeCell(eng, slots=args.slots, registry=met)
+        with cell:
+            sched = cell.lm_scheduler(max_len=args.max_len,
+                                      eos_id=args.eos_id)
+            for r in requests:
+                sched.submit(r["id"], r["prompt"], r["gen"])
+            t0 = time.time()
+            out = sched.run()
         dt = time.time() - t0
+        decoded = sum(len(v) for v in out.values())
         telemetry.log("serve_done", requests=args.requests, tokens=decoded,
                       wall_s=dt, tok_s=decoded / dt,
-                      backend=eng.backend_name, **decode_ms.summary())
+                      backend=eng.backend_name,
+                      **met.histogram("cell_decode_latency_ms").summary())
+    return out
 
 
 if __name__ == "__main__":

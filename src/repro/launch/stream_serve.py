@@ -1,12 +1,13 @@
-"""Multi-stream streaming-KWS server (continuous-batching-lite for audio).
+"""Multi-stream streaming-KWS server: a thin CLI over ``repro.cell``.
 
-The streaming analogue of ``launch/serve.py``: a fixed pool of ``--slots``
-batch lanes, each lane carrying one live audio stream.  Every hop, one
-chunk per lane is packed into a single ``[B, k*hop]`` batch and pushed
-through the jitted ``stream.engine.stream_step`` + ``stream.detector``
-under ``dist.ctx`` sharding; finished streams free their lane, which is
-zeroed (``engine.reset_lane``) and immediately refilled from the queue —
-the step always runs at full batch.
+The lane pool, admission control, per-lane lifecycle, hop accounting and
+checkpoint hot-swap all live in :class:`repro.cell.ServeCell`; this
+launcher only builds the Engine, synthesises stream sources, and feeds
+chunks.  Every hop, one chunk per lane is packed into a single
+``[B, k*hop]`` batch and pushed through the cell's fused engine+detector
+step under ``dist.ctx`` sharding; finished streams free their lane,
+which is zeroed and refilled from the admission queue — the step always
+runs at full batch, with no drain barrier.
 
 Execution policy is the same first-class serving flag as offline serve:
 ``--backend float|lut_float|lut|pallas`` resolves through
@@ -14,6 +15,14 @@ Execution policy is the same first-class serving flag as offline serve:
 softmax-GELU for the non-float backends); streaming logits stay
 bit-identical to that engine's offline forward either way
 (tests/test_stream.py, tests/test_runtime.py).
+
+Overload behaviour (``repro.cell.admission``): offered streams beyond
+``--max-queue`` (or past ``--deadline-ms`` of queue wait) are shed
+BEFORE any audio is ingested; with ``--degrade-queue`` set, a backed-up
+cell first degrades to ``--degrade-chunk-hops`` hops per engine step —
+trading detection latency for throughput — and only then rejects.
+``--watch-dir`` points the cell at a checkpoint directory for in-flight
+hot-swap of freshly published artifacts.
 
 Usage (CPU, reduced):
   PYTHONPATH=src python -m repro.launch.stream_serve --streams 8 --slots 4 \
@@ -26,15 +35,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import cell as cellmod
 from repro import runtime
 from repro import telemetry
 from repro.configs import registry
 from repro.data import pipeline
-from repro.dist import ctx
-from repro.launch import mesh as meshlib
 from repro.launch import serve_common
 from repro.models import kwt
 from repro.stream import detector as det
@@ -91,6 +98,18 @@ def main(argv=None):
     ap.add_argument("--train-steps", type=int, default=80,
                     help="0 = serve a randomly initialised model")
     ap.add_argument("--seed", type=int, default=0)
+    # admission control (repro.cell.admission); defaults admit everything
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded wait queue (default: --streams)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="shed streams that waited longer than this")
+    ap.add_argument("--degrade-queue", type=int, default=0,
+                    help=">0: degrade to --degrade-chunk-hops when the "
+                         "queue is deeper than this")
+    ap.add_argument("--degrade-chunk-hops", type=int, default=4)
+    ap.add_argument("--watch-dir", default=None,
+                    help="hot-swap checkpoints published here "
+                         "(repro.cell.hotswap)")
     serve_common.add_telemetry_args(ap)
     args = ap.parse_args(argv)
     backend = args.backend
@@ -100,20 +119,14 @@ def main(argv=None):
     assert base_cfg.family == "kwt", "streaming serve drives the KWT family"
     fcfg = features.FrontendConfig()
     dcfg = det.DetectorConfig()
-    mesh = meshlib.make_host_mesh()
 
     # training always runs the float path; the engine then owns PTQ + mode
-    # selection for serving.  The fused server hop closes over the engine's
-    # LIVE float view (integer-resident plans store packed QTensors; the
-    # per-plan unpack runs once here), keeping the joint jit's model graph
-    # identical to Engine.forward's — the bit-identity contract.
+    # selection for serving.
     fparams = train_params(base_cfg, fcfg, args.train_steps, args.seed)
     eng = runtime.compile_model(base_cfg, fparams, backend=backend)
     telemetry.log("engine", plan=eng.describe())
-    cfg, params = eng.exec_cfg, eng.live_params()
 
     B, k = args.slots, args.chunk_hops
-    chunk_samples = k * fcfg.hop_len
     queue = list(range(args.streams))
     rng = np.random.RandomState(args.seed)
     sources = {}
@@ -125,102 +138,110 @@ def main(argv=None):
             args.seed, sid, n_hops=hops, hop_len=fcfg.hop_len)
         sources[sid] = {"audio": audio, "events": events, "hops": hops}
 
-    with serve_common.session(args.telemetry_out) as (tracer, met), \
-            mesh, ctx.mesh_context(meshlib.dp_axes(mesh)):
-        hop_ms = met.histogram("serve_hop_latency_ms",
-                               "engine+detector step wall time", unit="ms")
-        occupancy = met.gauge("serve_lane_occupancy",
-                              "active lanes / batch slots")
-        qdepth = met.gauge("serve_queue_depth", "streams waiting for a lane")
-        refills = met.counter("serve_lane_refills_total",
-                              "lane reset+refill operations")
-        hops_ctr = met.counter("serve_hops_total", "hops ingested per lane")
-        events_ctr = met.counter("serve_detector_events_total",
-                                 "keyword detections fired")
-        rtf = met.histogram("serve_stream_rtf", "per-stream real-time "
-                            "factor (wall seconds / audio seconds; <1 is "
-                            "faster than realtime)", unit="x")
+    adm = cellmod.AdmissionConfig(
+        max_queue=args.max_queue if args.max_queue is not None
+        else max(args.streams, 1),
+        deadline_ms=args.deadline_ms,
+        degrade_queue=args.degrade_queue if args.degrade_queue > 0
+        else args.streams + 1,
+        degraded_chunk_hops=max(args.degrade_chunk_hops, k))
 
-        state = engine.init_stream_state(cfg, fcfg, B, keep_features=False)
-        dstate = det.detector_init(dcfg, B)
-        step = jax.jit(lambda p, s, ds, c: _joint_step(p, s, ds, c, cfg,
-                                                       fcfg, dcfg))
-        reset = jax.jit(lambda s, ds, lane: (
-            engine.reset_lane(s, lane), det.detector_reset_lane(ds, lane)))
-
-        active = [None] * B          # stream id per lane
-        offset = np.zeros(B, np.int64)
-        started = np.zeros(B, np.float64)      # lane fill wall time
-        fired, done, hops_run = [], [], 0
-        t0 = time.time()
-        while len(done) < args.streams:
-            with telemetry.span("refill"):
-                for i in range(B):   # refill free lanes
-                    if active[i] is None and queue:
-                        active[i] = queue.pop(0)
-                        offset[i] = 0
-                        started[i] = time.time()
-                        state, dstate = reset(state, dstate, i)
-                        refills.inc()
-            n_active = sum(1 for a in active if a is not None)
-            occupancy.set(n_active / B)
-            qdepth.set(len(queue))
-            chunk = np.zeros((B, chunk_samples), np.float32)
-            with telemetry.span("pack"):
-                for i in range(B):
-                    if active[i] is not None:
-                        a = sources[active[i]]["audio"]
-                        chunk[i] = a[offset[i]:offset[i] + chunk_samples]
-                        offset[i] += chunk_samples
-            t_hop = time.perf_counter()
-            with telemetry.span("hop", {"backend": eng.backend_name}):
-                state, dstate, events = step(params, state, dstate,
-                                             jnp.asarray(chunk))
-                # the loop syncs on events every hop anyway (fired_now
-                # below); blocking here just moves the sync inside the
-                # measured window.
-                events = jax.block_until_ready(events)
-            hop_ms.observe(1e3 * (time.perf_counter() - t_hop))
-            hops_run += k
-            hops_ctr.inc(k)
-            fired_now = np.asarray(events["fired"])
-            with telemetry.span("detector"):
-                for i in range(B):
-                    sid = active[i]
-                    if sid is None:
-                        continue
-                    if fired_now[i]:
-                        hop = int(offset[i] // fcfg.hop_len)
-                        fired.append((sid, hop))
-                        events_ctr.inc()
-                        telemetry.log(
-                            "detector_event", stream=sid,
-                            t_s=det.event_time_s(hop, fcfg),
-                            score=float(events["score"][i]),
-                            backend=eng.backend_name)
-                    if offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
-                        done.append(sid)
-                        active[i] = None
-                        audio_s_i = sources[sid]["hops"] \
-                            * fcfg.hop_len / fcfg.sample_rate
-                        rtf.observe((time.time() - started[i]) / audio_s_i)
-        dt = time.time() - t0
-        audio_s = sum(s["hops"] for s in sources.values()) \
-            * fcfg.hop_len / fcfg.sample_rate
-        truth = sum(len(s["events"]) for s in sources.values())
-        telemetry.log("serve_done", streams=args.streams, audio_s=audio_s,
-                      wall_s=dt, realtime_x=audio_s / dt, fired=len(fired),
-                      keywords=truth, backend=eng.backend_name,
-                      **hop_ms.summary())
+    with serve_common.session(args.telemetry_out) as (tracer, met):
+        probe = np.zeros((1,) + tuple(base_cfg.input_dim), np.float32)
+        cell = cellmod.ServeCell(
+            eng, slots=B, registry=met, admission=adm,
+            watch_dir=args.watch_dir,
+            watch_like=eng.params if args.watch_dir else None,
+            probe=probe if args.watch_dir else None)
+        with cell:
+            fired = _serve(cell, sources, queue, fcfg, dcfg, k, met)
     return fired
 
 
-def _joint_step(params, state, dstate, chunk, cfg, fcfg, dcfg):
-    """One fused server hop: engine + posteriors + detector."""
-    state, logits = engine.stream_step(params, state, chunk, cfg, fcfg)
-    dstate, events = det.detector_step(dstate, engine.posteriors(logits),
-                                       dcfg, warm=engine.warm(state))
-    return state, dstate, events
+def _serve(cell, sources, queue, fcfg, dcfg, chunk_hops, met):
+    """The serve loop proper: offer -> join -> hop -> evict, to drain."""
+    lanes = cell.stream_lanes(fcfg, dcfg, chunk_hops=chunk_hops)
+    B = cell.slots
+    shed = []
+    for sid in queue:
+        if not cell.admission.offer(sid).admitted:
+            shed.append(sid)
+    n_to_serve = len(queue) - len(shed)
+
+    events_ctr = met.counter("serve_detector_events_total",
+                             "keyword detections fired")
+    rtf = met.histogram("serve_stream_rtf", "per-stream real-time "
+                        "factor (wall seconds / audio seconds; <1 is "
+                        "faster than realtime)", unit="x")
+
+    active = [None] * B          # stream id per lane
+    offset = np.zeros(B, np.int64)
+    started = np.zeros(B, np.float64)      # lane fill wall time
+    fired, done = [], []
+    eng = cell.engine
+    t0 = time.time()
+    while len(done) < n_to_serve:
+        cell.maybe_swap()
+        with telemetry.span("refill"):
+            for lane in lanes.free_lanes():
+                sid = cell.admission.pop()
+                if sid is None:
+                    break
+                lanes.join(lane)
+                active[lane] = sid
+                offset[lane] = 0
+                started[lane] = time.time()
+        # overload degrade: a backed-up queue widens the chunk cell-wide
+        lanes.set_chunk_hops(max(chunk_hops, cell.admission.chunk_hops()))
+        cs = lanes.chunk_samples
+        chunk = np.zeros((B, cs), np.float32)
+        ingest = np.zeros(B, np.int64)
+        with telemetry.span("pack"):
+            for i in range(B):
+                sid = active[i]
+                if sid is None:
+                    continue
+                a = sources[sid]["audio"]
+                end = sources[sid]["hops"] * fcfg.hop_len
+                n = int(min(cs, end - offset[i]))
+                chunk[i, :n] = a[offset[i]:offset[i] + n]
+                offset[i] += n
+                ingest[i] = n // fcfg.hop_len
+        with telemetry.span("hop", {"backend": eng.backend_name}):
+            events = lanes.hop(chunk, ingest=ingest)
+        with telemetry.span("detector"):
+            for i in range(B):
+                sid = active[i]
+                if sid is None:
+                    continue
+                if events["fired"][i]:
+                    hop = int(offset[i] // fcfg.hop_len)
+                    fired.append((sid, hop))
+                    events_ctr.inc()
+                    telemetry.log(
+                        "detector_event", stream=sid,
+                        t_s=det.event_time_s(hop, fcfg),
+                        score=float(events["score"][i]),
+                        backend=eng.backend_name)
+                if offset[i] >= sources[sid]["hops"] * fcfg.hop_len:
+                    done.append(sid)
+                    lanes.evict(i)
+                    active[i] = None
+                    audio_s_i = sources[sid]["hops"] \
+                        * fcfg.hop_len / fcfg.sample_rate
+                    rtf.observe((time.time() - started[i]) / audio_s_i)
+    dt = time.time() - t0
+    served = [s for sid, s in sources.items() if sid in done]
+    audio_s = sum(s["hops"] for s in served) * fcfg.hop_len / fcfg.sample_rate
+    truth = sum(len(s["events"]) for s in served)
+    telemetry.log("serve_done", streams=n_to_serve, shed=len(shed),
+                  audio_s=audio_s, wall_s=dt, realtime_x=audio_s / dt,
+                  fired=len(fired), keywords=truth,
+                  ingested_hops=int(met.counter("cell_hops_total").value),
+                  offered_hops=sum(s["hops"] for s in served),
+                  backend=eng.backend_name,
+                  **met.histogram("cell_hop_latency_ms").summary())
+    return fired
 
 
 if __name__ == "__main__":

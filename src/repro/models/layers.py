@@ -172,7 +172,10 @@ def _sdpa_block(q, k, v, cfg, *, q0, k0, q_offset, kv_len_valid, causal):
     """One [qc, kc] tile of masked attention.  q [B,qc,H,D]; k/v [B,kc,KV,D].
 
     q0/k0: static tile offsets within the (chunked) sequence;
-    q_offset: (possibly traced) absolute position of sequence start.
+    q_offset: (possibly traced) absolute position of sequence start —
+    scalar, or a per-lane [B] vector when lanes decode at heterogeneous
+    depths (the repro.cell continuous-batching path; ``kv_len_valid``
+    then carries the matching per-lane validity bound).
     """
     b, sq, h, dh = q.shape
     sk, kv = k.shape[1], k.shape[2]
@@ -186,7 +189,10 @@ def _sdpa_block(q, k, v, cfg, *, q0, k0, q_offset, kv_len_valid, causal):
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
                    preferred_element_type=acc_dt)
     s = s * jnp.asarray(dh ** -0.5, acc_dt)
-    qpos = jnp.asarray(q_offset) + q0 + jnp.arange(sq)   # [sq]
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim:                                       # per-lane [B]
+        q_off = q_off[:, None]
+    qpos = q_off + q0 + jnp.arange(sq)                   # [sq] or [B, sq]
     kpos = k0 + jnp.arange(sk)                           # [sk]
     # mask stays None when nothing masks (full bidirectional attention,
     # e.g. KWT): the softmax paths then skip the select ops entirely and
@@ -194,18 +200,24 @@ def _sdpa_block(q, k, v, cfg, *, q0, k0, q_offset, kv_len_valid, causal):
     # kernels.ops.lut_softmax.
     mask = None
     if causal:
-        mask = qpos[:, None] >= kpos[None, :]
+        mask = qpos[..., :, None] >= kpos
     if cfg.sliding_window and causal:
         # ring-buffer (causal=False) paths enforce the window by overwrite;
         # position-based banding only applies to contiguous layouts.
         mask = jnp.logical_and(
-            mask, kpos[None, :] > qpos[:, None] - cfg.sliding_window)
+            mask, kpos > qpos[..., :, None] - cfg.sliding_window)
     if kv_len_valid is not None:
-        valid = jnp.broadcast_to((kpos < jnp.asarray(kv_len_valid))[None, :],
-                                 (sq, sk))
+        kvv = jnp.asarray(kv_len_valid)
+        if kvv.ndim:                                     # per-lane [B]
+            valid = kpos < kvv[:, None, None]            # [B, 1, sk]
+        else:
+            valid = jnp.broadcast_to((kpos < kvv)[None, :], (sq, sk))
         mask = valid if mask is None else jnp.logical_and(mask, valid)
     if mask is not None:
-        mask = mask[None, None, None]               # broadcast over b, kv, g
+        if mask.ndim == 2:                          # [sq, sk]: shared lanes
+            mask = mask[None, None, None]           # broadcast over b, kv, g
+        else:                                       # [B, ., sk]: per-lane
+            mask = jnp.broadcast_to(mask, (b, sq, sk))[:, None, None]
     p = approx.masked_softmax(s, mask, mode=cfg.softmax_mode,
                               interpret=cfg.kernel_interpret)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
@@ -291,10 +303,20 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
         idx = cache_index
         kq, kscale = _q8_vec(k)
         vq, vscale = _q8_vec(v)
-        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
-        cks = jax.lax.dynamic_update_slice(cache["ks"], kscale, (0, idx, 0))
-        cvs = jax.lax.dynamic_update_slice(cache["vs"], vscale, (0, idx, 0))
+        if getattr(idx, "ndim", 0) == 1:     # per-lane decode (repro.cell)
+            assert sq == 1, "per-lane cache_index is a decode-only path"
+            lanes = jnp.arange(b)
+            ck = cache["k"].at[lanes, idx].set(kq[:, 0])
+            cv = cache["v"].at[lanes, idx].set(vq[:, 0])
+            cks = cache["ks"].at[lanes, idx].set(kscale[:, 0])
+            cvs = cache["vs"].at[lanes, idx].set(vscale[:, 0])
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["ks"], kscale,
+                                               (0, idx, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["vs"], vscale,
+                                               (0, idx, 0))
         valid = (idx + sq) if kv_len_valid is None else kv_len_valid
         q_off = idx if sq <= Q_CHUNK else 0
         out = sdpa(q, _q8_vec_decode(ck, cks, x.dtype),
@@ -307,8 +329,14 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
         return out.astype(x.dtype), new_cache
     else:
         idx = cache_index
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        if getattr(idx, "ndim", 0) == 1:     # per-lane decode (repro.cell)
+            assert sq == 1, "per-lane cache_index is a decode-only path"
+            lanes = jnp.arange(b)
+            ck = cache["k"].at[lanes, idx].set(k[:, 0])
+            cv = cache["v"].at[lanes, idx].set(v[:, 0])
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
         # barrier: stops XLA (notably the CPU bf16-dot lowering) from
         # hoisting f32 converts through the DUS into the scan's ys buffer,
         # which would keep a full-precision copy of the stacked KV cache.

@@ -261,8 +261,18 @@ def prefill(params, tokens, cfg, state):
     b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
     idx = state["index"]
+    per_lane = getattr(idx, "ndim", 0) == 1      # [B] vector (repro.cell)
     if cfg.family in ("dense", "moe"):
-        positions = idx + jnp.arange(s)
+        if per_lane:
+            # continuous-batching decode: every lane sits at its own depth.
+            # Cache writes scatter at [lane, idx[lane]]; positions and the
+            # validity bound are per-lane (layers._sdpa_block broadcasts).
+            assert s == 1, "per-lane decode state advances one token at " \
+                "a time; joins prefill a fresh state and merge " \
+                "(cell.scheduler)"
+            positions = idx[:, None] + jnp.arange(s)
+        else:
+            positions = idx + jnp.arange(s)
         x, new_layers = _scan_blocks(params, x, cfg, positions=positions,
                                      states=state["layers"], cache_index=idx,
                                      kv_len_valid=idx + s)
@@ -270,6 +280,9 @@ def prefill(params, tokens, cfg, state):
         x, new_layers = _scan_blocks(params, x, cfg, positions=None,
                                      states=state["layers"])
     else:  # hybrid
+        assert not per_lane, \
+            "per-lane decode indices cover dense/moe/rwkv; hybrid ring " \
+            "caches keep the shared-cursor path"
         w = cfg.sliding_window
         positions = idx + jnp.arange(s)
         if s > w:
@@ -294,8 +307,32 @@ def prefill(params, tokens, cfg, state):
 
 
 def decode_step(params, token, cfg, state):
-    """One new token [B] against the running state -> (logits [B,V], state)."""
+    """One new token [B] against the running state -> (logits [B,V], state).
+
+    ``state["index"]`` may be the usual shared scalar, or a per-lane [B]
+    vector (the ``repro.cell`` continuous-batching path: lanes decode at
+    heterogeneous depths, cache writes scatter per lane)."""
     return prefill(params, token[:, None], cfg, state)
+
+
+def merge_decode_state(old, new, lane_mask):
+    """Per-lane select between two same-shaped decode states.
+
+    The join half of continuous batching (cell.scheduler): freshly
+    prefilled lanes take ``new``'s cache/recurrence and index, resident
+    lanes keep ``old``'s — no drain barrier.  Every ``layers`` leaf is
+    stacked ``[n_layers, B, ...]`` (batch at axis 1); ``index`` may be
+    scalar on either side and merges to a per-lane [B] vector.
+    """
+    def sel(n, o):
+        m = lane_mask.reshape((1, lane_mask.shape[0]) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+
+    index = jnp.where(lane_mask,
+                      jnp.broadcast_to(new["index"], lane_mask.shape),
+                      jnp.broadcast_to(old["index"], lane_mask.shape))
+    return {"layers": jax.tree.map(sel, new["layers"], old["layers"]),
+            "index": index}
 
 
 def forward_no_blocks(params, tokens, cfg):

@@ -10,7 +10,7 @@ directly — see README §repro.runtime for the migration table.
 
 from repro.runtime.backends import (Backend, available_backends, get_backend,
                                     plan_interpret, register_backend)
-from repro.runtime.engine import Engine, compile_model
+from repro.runtime.engine import Engine, EngineHandle, compile_model
 from repro.runtime.recipe import QuantRecipe
 
 
@@ -21,6 +21,6 @@ def quantize_params(params, cfg, rounding: str = "nearest"):
     return QuantRecipe.from_config(cfg, rounding=rounding).apply(params)
 
 
-__all__ = ["Backend", "Engine", "QuantRecipe", "available_backends",
-           "compile_model", "get_backend", "plan_interpret",
-           "quantize_params", "register_backend"]
+__all__ = ["Backend", "Engine", "EngineHandle", "QuantRecipe",
+           "available_backends", "compile_model", "get_backend",
+           "plan_interpret", "quantize_params", "register_backend"]

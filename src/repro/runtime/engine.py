@@ -27,6 +27,7 @@ PTQ + LUT-bin tolerance.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Optional
 
 import jax
@@ -301,6 +302,75 @@ class Engine:
                 f"{what} is a KWT streaming entry point; family="
                 f"{self.exec_cfg.family!r} engines expose forward/prefill/"
                 "decode_step")
+
+
+class EngineHandle:
+    """A swap-safe reference to the live Engine of a serving cell.
+
+    Serving loops read ``handle.engine`` (or call the delegating entry
+    points) each hop; ``cell.hotswap`` replaces the Engine atomically
+    under the handle's lock after warming + probe-parity verification.
+    Lane state (stream rings, detector state, decode caches) lives
+    outside the Engine, so a swap changes only params + executables —
+    in-flight lanes keep their positions and no hop is dropped.
+
+    ``swap`` enforces plan compatibility by default: the incoming
+    Engine must share the exec config (same arch dims + pinned modes)
+    and a param tree of identical structure/shapes, so the serving
+    loop's jitted programs keep their compiled executables and the swap
+    costs one reference assignment, not a recompile mid-traffic.
+    """
+
+    def __init__(self, engine: Engine):
+        self._lock = threading.Lock()
+        self._engine = engine
+        self._generation = 0
+        self._live_cache = None          # (generation, unpacked float view)
+
+    @property
+    def engine(self) -> Engine:
+        return self._engine
+
+    @property
+    def generation(self) -> int:
+        """Bumps once per completed swap (serving loops key caches on it)."""
+        return self._generation
+
+    def live_params(self):
+        """The current Engine's float operand tree, cached per generation
+        (one unpack per swap instead of one per hop for integer-resident
+        plans; see :meth:`Engine.live_params`)."""
+        with self._lock:
+            gen, eng = self._generation, self._engine
+        cache = self._live_cache
+        if cache is not None and cache[0] == gen:
+            return cache[1]
+        live = eng.live_params()
+        self._live_cache = (gen, live)
+        return live
+
+    def swap(self, new_engine: Engine, *, strict: bool = True) -> Engine:
+        """Install ``new_engine``; returns the Engine it replaced."""
+        if strict:
+            old = self._engine
+            if new_engine.exec_cfg != old.exec_cfg:
+                raise ValueError(
+                    "hot-swap across exec configs would recompile the "
+                    f"serving programs mid-traffic: {old.exec_cfg.name}/"
+                    f"{old.backend.name} -> {new_engine.exec_cfg.name}/"
+                    f"{new_engine.backend.name} (swap(strict=False) to "
+                    "force)")
+            old_shapes = [(getattr(x, "shape", None))
+                          for x in jax.tree.leaves(old.params)]
+            new_shapes = [(getattr(x, "shape", None))
+                          for x in jax.tree.leaves(new_engine.params)]
+            if old_shapes != new_shapes:
+                raise ValueError("hot-swap param tree shape mismatch")
+        with self._lock:
+            old, self._engine = self._engine, new_engine
+            self._generation += 1
+            self._live_cache = None
+        return old
 
 
 def _has_qtensors(tree) -> bool:

@@ -75,7 +75,19 @@ def detector_step(state: dict, probs: jnp.ndarray, dcfg: DetectorConfig,
 
 
 def detector_reset_lane(state: dict, lane) -> dict:
-    """Re-arm one lane on server slot refill."""
+    """Re-arm lane(s) on evict/join: the recycled-lane contract.
+
+    A detector lane carries memory — the posterior history ring, the
+    hysteresis latch (``active``), the refractory countdown and the
+    warm-up count.  ALL of it belongs to the stream, not the slot: a
+    server that recycles a lane without this reset hands the next stream
+    the previous one's state, so a stream joining right after a fire
+    inherits a live refractory countdown (its own early keyword is
+    silently suppressed) or a latched hysteresis (never fires at all) —
+    tests/test_cell.py demonstrates both.  ``cell.StreamLanes.join``
+    calls this unconditionally; ``lane`` may be an int or an index array
+    (one batched reset for a multi-lane join).
+    """
     return {"hist": ring.ring_reset_lane(state["hist"], lane),
             "active": state["active"].at[lane].set(False),
             "cooldown": state["cooldown"].at[lane].set(0),

@@ -86,6 +86,36 @@ def stream_step(params, state: dict, chunk: jnp.ndarray, cfg,
     return new, logits
 
 
+def stream_step_frames(params, state: dict, frames: jnp.ndarray,
+                       cfg) -> tuple[dict, jnp.ndarray]:
+    """Advance every stream by ``frames`` [B, k, F] pre-featurised MFCC
+    frames — the edge-featurised ingest path.
+
+    The paper's deployment computes MFCCs on the device next to the
+    microphone; a serving cell aggregating such streams receives feature
+    frames (F coefficients/hop), not raw audio.  This entrypoint is
+    ``stream_step`` minus the frontend: feeding it the frames that
+    ``features.frontend_push`` produces for a chunk yields bit-identical
+    logits and state to ``stream_step`` on that chunk (the frontend tail
+    is carried, untouched, so the two paths stay interchangeable per
+    lane; tests/test_cell.py pins this through ``cell.StreamLanes``).
+    """
+    new = {"frontend": state["frontend"]}
+    if "feat" in state:
+        new["feat"] = ring.ring_push(state["feat"], frames)
+    with annotate("embed"):
+        emb = ring.ring_push(state["embed"],
+                             kwt.embed_frames(params, frames, cfg))
+    new["embed"] = emb
+    # same barrier rationale as stream_step: the encoder sees only the
+    # assembled window, keeping its rounding independent of k.
+    window = jax.lax.optimization_barrier(
+        ctx.shard_activations(ring.ring_window(emb)))
+    with annotate("encode"):
+        logits = kwt.encode_window(params, window, cfg)
+    return new, logits
+
+
 def warm(state: dict) -> jnp.ndarray:
     """[B] bool: lane's window is fully populated with real frames."""
     return ring.ring_warm(state["embed"])

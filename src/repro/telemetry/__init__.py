@@ -19,6 +19,7 @@ XLA profiles, never changes numerics.
 from jax import named_scope as annotate
 
 from repro.telemetry import taps
+from repro.telemetry.cell import CellMetrics, make_cell_metrics
 from repro.telemetry.check import (
     TelemetryFormatError,
     validate_chrome_trace,
@@ -46,6 +47,7 @@ from repro.telemetry.trace import (
 
 __all__ = [
     "NOOP_SPAN",
+    "CellMetrics",
     "Counter",
     "Gauge",
     "Histogram",
@@ -59,6 +61,7 @@ __all__ = [
     "enable",
     "latency_summary",
     "log",
+    "make_cell_metrics",
     "span",
     "span_coverage",
     "taps",
