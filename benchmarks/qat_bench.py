@@ -137,12 +137,15 @@ def bench_qat(out_path="BENCH_qat.json", *, float_steps=300, qat_steps=200,
         row("qat_kd", acc_kd)
         ok_kd &= acc_kd >= acc_ptq - 0.02
 
+    from repro import perf
+
     report = {
         "arch": "kwt-tiny", "task": "2-class keyword surrogate",
         "eval_n": eval_n, "float_steps": float_steps,
         "qat_steps": qat_steps, "float_accuracy": round(acc_float, 4),
         "teacher_accuracy": round(t_acc, 4),
         "device": jax.default_backend(),
+        "provenance": perf.provenance(),
         "wall_s": round(time.time() - t_start, 1),
         "acceptance": {"qat_ge_ptq": bool(ok_qat),
                        "kd_ge_ptq": bool(ok_kd)},

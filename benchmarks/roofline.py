@@ -1,124 +1,65 @@
-"""Roofline report generator: reads results/dryrun/*.json (written by
-launch/dryrun.py) and emits the §Dry-run and §Roofline markdown tables for
-EXPERIMENTS.md.
+"""Roofline report for Engine plans: cost table + achieved-vs-peak CSV.
 
-  PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--tag TAG]
+A thin CLI over :mod:`repro.perf` — calibrate the host, price each
+backend's compiled plan with the static cost model, and print the
+paper-style (stage, op) table plus one achieved-vs-peak row per
+backend.  The sweep drivers (``benchmarks/run.py --backend-sweep``,
+``benchmarks/stream_bench.py``) embed the same columns in their JSON
+rows; this command is the standalone/inspection view.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--arch kwt-tiny]
+      [--backends float lut pallas] [--batch 64] [--mcu] [--smoke]
+
+``--mcu`` prices on the paper's RV32 MCU model (cycles, the 26M → 5.5M
+unit) instead of the measured host roofline.
 """
 
 from __future__ import annotations
 
 import argparse
-import glob
-import json
-import os
-
-SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
-ARCH_ORDER = ["granite-moe-3b-a800m", "deepseek-moe-16b", "chameleon-34b",
-              "whisper-large-v3", "hymba-1.5b", "rwkv6-3b",
-              "nemotron-4-340b", "granite-8b", "internlm2-1.8b",
-              "qwen2.5-14b"]
+import sys
 
 
-def load(results_dir: str, tag: str = ""):
-    recs = {}
-    for f in glob.glob(os.path.join(results_dir, f"*{tag}.json")):
-        with open(f) as fh:
-            r = json.load(fh)
-        if r.get("tag"):          # hillclimb variants live in §Perf, not here
-            continue
-        recs[(r["arch"], r["shape"], r["mesh"])] = r
-    return recs
+def main(argv=None) -> int:
+    import jax
 
+    from repro import perf, runtime
+    from repro.configs import registry
+    from repro.launch import steps
 
-def fmt_s(x):
-    if x >= 1.0:
-        return f"{x:.2f}s"
-    if x >= 1e-3:
-        return f"{x*1e3:.1f}ms"
-    return f"{x*1e6:.0f}us"
-
-
-def dryrun_table(recs, mesh="single"):
-    rows = ["| arch | shape | compile | peak GB/dev raw (TPU-adj) | fits 16GB | "
-            "per-dev GFLOP | per-dev GB moved | collective MB |",
-            "|---|---|---|---|---|---|---|---|"]
-    for arch in ARCH_ORDER:
-        for shape in SHAPE_ORDER:
-            r = recs.get((arch, shape, mesh))
-            if r is None:
-                continue
-            if "skipped" in r:
-                rows.append(f"| {arch} | {shape} | — | — | skip | — | — | — |"
-                            f" <!-- {r['skipped']} -->")
-                continue
-            m = r["memory"]
-            c = r.get("cost") or r["full_program_cost_raw"]
-            adj = m.get("peak_bytes_tpu_adjusted", m["peak_bytes_est"])
-            rows.append(
-                f"| {arch} | {shape} | {r.get('compile_s', 0):.0f}s "
-                f"| {m['peak_bytes_est']/1e9:.2f} ({adj/1e9:.2f} adj) "
-                f"| {'YES' if adj <= 16e9 else '**NO**'} "
-                f"| {c['flops']/1e9:.0f} | {c['bytes']/1e9:.1f} "
-                f"| {c['collective_bytes']/1e6:.0f} |")
-    return "\n".join(rows)
-
-
-def roofline_table(recs):
-    rows = ["| arch | shape | compute | memory | collective | dominant | "
-            "MODEL/HLO flops | roofline fraction |",
-            "|---|---|---|---|---|---|---|---|"]
-    for arch in ARCH_ORDER:
-        for shape in SHAPE_ORDER:
-            r = recs.get((arch, shape, "single"))
-            if r is None or "skipped" in r or "roofline" not in r:
-                if r is not None and "skipped" in r:
-                    rows.append(f"| {arch} | {shape} | — | — | — | skip | — | — |")
-                continue
-            rf = r["roofline"]
-            dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
-            # roofline fraction: useful-compute time / dominant-term time
-            useful_s = (r["model_flops"] / r["n_chips"]) / 197e12
-            frac = useful_s / max(dom, 1e-12)
-            rows.append(
-                f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} "
-                f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
-                f"| **{rf['dominant']}** | {r['model_to_hlo']:.2f} "
-                f"| {frac:.1%} |")
-    return "\n".join(rows)
-
-
-def collective_summary(recs, mesh="single"):
-    rows = []
-    for (arch, shape, m), r in sorted(recs.items()):
-        if m != mesh or "skipped" in r or "cost" not in r:
-            continue
-        colls = {}
-        for comp in r["cost"]["components"]:
-            for k, v in comp.get("collectives", {}).items():
-                colls[k] = colls.get(k, 0) + comp["multiplier"] * v
-        top = ", ".join(f"{k}={v/1e6:.0f}MB" for k, v in
-                        sorted(colls.items(), key=lambda kv: -kv[1])[:3])
-        rows.append(f"- {arch} x {shape}: {top}")
-    return "\n".join(rows)
-
-
-def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--results", default=os.path.join(
-        os.path.dirname(__file__), "..", "results", "dryrun"))
-    ap.add_argument("--tag", default="")
-    args = ap.parse_args()
-    recs = load(args.results, args.tag)
-    print("## Dry-run (single pod, 16x16 = 256 chips)\n")
-    print(dryrun_table(recs, "single"))
-    print("\n## Dry-run (multi-pod, 2x16x16 = 512 chips)\n")
-    print(dryrun_table(recs, "multi"))
-    print("\n## Roofline (single pod; v5e: 197TF bf16, 819GB/s HBM, "
-          "50GB/s ICI)\n")
-    print(roofline_table(recs))
-    print("\n## Dominant collectives per cell\n")
-    print(collective_summary(recs))
+    ap.add_argument("--arch", default="kwt-tiny")
+    ap.add_argument("--backends", nargs="+",
+                    default=["float", "lut_float", "lut", "pallas"])
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's smoke config")
+    ap.add_argument("--mcu", action="store_true",
+                    help="price on the paper's RV32 MCU model")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch).smoke if args.smoke \
+        else registry.get(args.arch).config
+    params = steps.model_module(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    machine = perf.PAPER_MCU if args.mcu else perf.host_machine()
+    print(f"machine: {machine.id} (ridge {machine.ridge:.2f} flops/byte)\n")
+
+    summary = ["backend,flops,bytes_moved,arithmetic_intensity,bound,"
+               "roof_time_us,est_cycles"]
+    for backend in args.backends:
+        eng = runtime.compile_model(cfg, params, backend=backend)
+        rep = perf.engine_cost(eng, batch=args.batch)
+        print(f"## {args.arch} · backend={backend} · batch={args.batch}")
+        print(rep.table(machine))
+        print()
+        summary.append(
+            f"{backend},{rep.flops:.0f},{rep.bytes:.0f},"
+            f"{rep.intensity:.4f},{machine.verdict(rep.intensity)},"
+            f"{machine.time_s(rep.flops, rep.bytes) * 1e6:.1f},"
+            f"{machine.cycles(rep.flops, rep.bytes):.0f}")
+    print("\n".join(summary))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

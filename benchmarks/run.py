@@ -48,7 +48,8 @@ def bench_kernels():
 
 def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
                         batch: int = 64, reps: int = 20,
-                        warmup: int = 3) -> dict:
+                        warmup: int = 3,
+                        history: str | None = None) -> dict:
     """Per-backend forward latency of the Engine the launchers actually
     serve (runtime.compile_model on KWT-Tiny), emitted as JSON.
 
@@ -74,10 +75,20 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     ``float_leak_count`` (residency pass: int->float casts in the unpack
     stage — the number that must reach zero for full-integer execution)
     and ``ram_budget_bytes`` (budget pass: ROM + LUT + peak activation
-    live-set, the figure gated against the paper's 64 kB target)."""
+    live-set, the figure gated against the paper's 64 kB target).
+
+    Cost accounting (repro.perf): every row carries the static cost
+    model's ``flops`` / ``bytes_moved`` / ``arithmetic_intensity`` for
+    its plan, the achieved fraction of the *calibrated host roofline*
+    at that intensity (``achieved_pct_of_roof`` + compute/memory
+    ``bound`` verdict — the ROADMAP's achieved-vs-peak column), and
+    ``est_mcu_cycles``: the per-sample plan priced on the paper's RV32
+    MCU model, the unit of the paper's 26M → 5.5M ledger.  With
+    ``history`` set, every row is also appended to the bench ledger
+    (``repro.perf.ledger``) for the CI regression gate."""
     import numpy as np
 
-    from repro import analysis, runtime, telemetry
+    from repro import analysis, perf, runtime, telemetry
     from repro.configs import registry
     from repro.models import kwt
 
@@ -85,6 +96,8 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     params = kwt.init_params(cfg, jax.random.PRNGKey(0))
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1),
                                 (batch, *cfg.input_dim))
+    machine = perf.host_machine()
+    prov = perf.provenance(machine)
     plans = [(name, None) for name in runtime.available_backends()]
     plans.append(("lut", runtime.QuantRecipe.from_config(
         cfg, bits=4).calibrated(params)))          # the int4 storage row
@@ -119,8 +132,14 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
         rep = analysis.check_engine(eng, passes=("residency", "budget"))
         leaks = rep.result("residency").metrics["float_leak_count"]
         ram = rep.result("budget").metrics["total_bytes"]
+        cost = perf.engine_cost(eng, batch=batch)
+        cost1 = perf.engine_cost(eng, batch=1)     # per-sample, MCU units
         row = {"backend": label, "us_per_forward": round(us, 1),
                **lat,
+               **perf.roofline_terms(cost.flops, cost.bytes, us / 1e6,
+                                     machine),
+               "est_mcu_cycles": round(perf.PAPER_MCU.cycles(cost1.flops,
+                                                             cost1.bytes)),
                "unpack_us": round(unpack_us, 1),
                "encode_us": round(encode_us, 1),
                "span_coverage_pct": round(100.0 * coverage, 1),
@@ -139,13 +158,29 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
               f"p95={lat['p95_us']}us;unpack={unpack_us:.1f}us;"
               f"encode={encode_us:.1f}us;rom={eng.rom_bytes}B;"
               f"lut={eng.lut_bytes}B;params={eng.param_bytes}B;"
-              f"leaks={leaks};ram={ram}B;interpret={eng.interpret}")
+              f"leaks={leaks};ram={ram}B;roof={row['achieved_pct_of_roof']}"
+              f"%({row['bound']});interpret={eng.interpret}")
     report = {"arch": "kwt-tiny", "batch": batch, "reps": reps,
               "warmup": warmup, "device": jax.default_backend(),
+              "provenance": prov, "machine": machine.to_dict(),
               "results": results}
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}", file=sys.stderr)
+    if history:
+        n = perf.append(history, [
+            perf.entry("kwt-tiny", r["backend"], batch,
+                       r["us_per_forward"], "us_per_forward",
+                       rom_bytes=r["packed_rom_bytes"],
+                       extra={"achieved_pct_of_roof":
+                              r["achieved_pct_of_roof"],
+                              "achieved_pct_of_peak":
+                              r["achieved_pct_of_peak"],
+                              "bound": r["bound"],
+                              "est_mcu_cycles": r["est_mcu_cycles"]},
+                       prov=prov)
+            for r in results])
+        print(f"appended {n} entries to {history}", file=sys.stderr)
     return report
 
 
@@ -157,11 +192,18 @@ def main() -> None:
                     help="per-backend Engine forward latency -> "
                          "BENCH_runtime.json (skips the paper tables)")
     ap.add_argument("--out", default="BENCH_runtime.json")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="sweep batch size (CI smoke uses a small one)")
+    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--history", default=None,
+                    help="append sweep rows to this bench ledger "
+                         "(BENCH_history.jsonl) for repro.perf regress")
     args = ap.parse_args()
 
     if args.backend_sweep:
         print("name,us_per_call,derived")
-        bench_backend_sweep(args.out)
+        bench_backend_sweep(args.out, batch=args.batch, reps=args.reps,
+                            history=args.history)
         return
 
     from benchmarks import paper_tables as pt

@@ -42,6 +42,7 @@ import jax
 import numpy as np
 
 from repro import cell as cellmod
+from repro import perf
 from repro import runtime
 from repro import telemetry
 from repro.configs import registry
@@ -132,7 +133,9 @@ def bench_lm(backend: str, slots: int, requests: int, max_len: int,
             "decode_tokens": decoded,
             "prefill_tokens": int(m.prefill_tokens.value) // 2,
             "wall_s": round(dt, 4),
-            "tokens_per_s": round(decoded / dt, 2)}
+            "tokens_per_s": round(decoded / dt, 2),
+            "ms_per_token": round(1e3 * dt / max(decoded, 1), 4),
+            "packed_rom_bytes": eng.rom_bytes}
 
 
 def main(argv=None):
@@ -157,6 +160,9 @@ def main(argv=None):
     ap.add_argument("--lm-max-len", type=int, default=64)
     ap.add_argument("--no-lm", action="store_true")
     ap.add_argument("--out", default="BENCH_stream.json")
+    ap.add_argument("--history", default=None,
+                    help="append sweep rows to this bench ledger "
+                         "(BENCH_history.jsonl) for repro.perf regress")
     args = ap.parse_args(argv)
 
     base = registry.get(args.arch).smoke
@@ -165,10 +171,12 @@ def main(argv=None):
     params = kwt.init_params(base, jax.random.PRNGKey(0))
     wide_k = args.wide_chunk_hops if args.wide_chunk_hops is not None \
         else engine.window_frames(base)
+    machine = perf.host_machine()
+    prov = perf.provenance(machine)
 
     results = []
     print("mode,ingest,streams,chunk_hops,per_step_ms,p50_ms,p95_ms,rtf,"
-          "aggregate_realtime_x")
+          "aggregate_realtime_x,roof_pct,bound")
     for b in args.backends:
         eng = runtime.compile_model(base, params, backend=b)
         for n in args.streams:
@@ -180,14 +188,25 @@ def main(argv=None):
             for ingest, k in rows:
                 r = {"mode": b,
                      **bench_one(eng, fcfg, dcfg, n, args.hops, k, ingest)}
+                # static cost of exactly this hop program, roofed
+                # against the calibrated host
+                cost = perf.stream_hop_cost(
+                    eng, fcfg, batch=n, chunk_hops=k,
+                    feature_ingest=(ingest == "feature"))
+                r.update(perf.roofline_terms(cost.flops, cost.bytes,
+                                             r["per_step_ms"] / 1e3,
+                                             machine))
+                r["packed_rom_bytes"] = eng.rom_bytes
                 results.append(r)
                 print(f"{b},{ingest},{n},{k},{r['per_step_ms']},"
                       f"{r['p50_ms']},{r['p95_ms']},{r['rtf']},"
-                      f"{r['aggregate_realtime_x']}")
+                      f"{r['aggregate_realtime_x']},"
+                      f"{r['achieved_pct_of_roof']},{r['bound']}")
 
     report = {"arch": args.arch,
               "host": {"cpus": os.cpu_count(),
                        "backend": jax.default_backend()},
+              "provenance": prov, "machine": machine.to_dict(),
               "frontend": {"sample_rate": fcfg.sample_rate,
                            "frame_len": fcfg.frame_len,
                            "hop_len": fcfg.hop_len,
@@ -203,6 +222,22 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {args.out}")
+    if args.history:
+        entries = [perf.entry(
+            args.arch, f"{r['mode']}/{r['ingest']}@k{r['chunk_hops']}",
+            r["streams"], r["per_step_ms"], "ms_per_hop",
+            rom_bytes=r["packed_rom_bytes"],
+            extra={"rtf": r["rtf"],
+                   "achieved_pct_of_roof": r["achieved_pct_of_roof"],
+                   "bound": r["bound"]},
+            prov=prov) for r in results]
+        entries += [perf.entry(
+            r["arch"], f"{r['mode']}/lm", r["slots"], r["ms_per_token"],
+            "ms_per_token", rom_bytes=r["packed_rom_bytes"],
+            extra={"tokens_per_s": r["tokens_per_s"]}, prov=prov)
+            for r in report.get("lm", [])]
+        print(f"appended {perf.append(args.history, entries)} entries "
+              f"to {args.history}")
 
     worst_small = max((r["rtf"] for r in results if r["streams"] <= 64),
                       default=None)

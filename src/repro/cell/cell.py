@@ -43,6 +43,7 @@ from repro.dist import ctx
 from repro.launch import mesh as meshlib
 from repro.stream import detector as det
 from repro.stream import engine as stream_engine
+from repro.telemetry import flight as flight_mod
 from repro.telemetry.cell import make_cell_metrics
 
 
@@ -55,6 +56,7 @@ class ServeCell:
                  watch_dir: Optional[str] = None,
                  watch_like: Any = None,
                  probe: Any = None,
+                 flight: Any = None,
                  mesh=None, poll_s: float = 0.5):
         self.handle = engine if isinstance(engine, runtime.EngineHandle) \
             else runtime.EngineHandle(engine)
@@ -73,6 +75,14 @@ class ServeCell:
                                                          poll_s=poll_s)
         self.mesh = meshlib.make_host_mesh() if mesh is None else mesh
         self.metrics.engine_generation.set(self.handle.generation)
+        # black box: ``flight`` is a FlightRecorder, a FlightConfig, or
+        # True for defaults; every lane hop feeds it (StreamLanes.hop)
+        # and swap attempts re-check its triggers (maybe_swap).
+        if flight is True:
+            flight = flight_mod.FlightConfig()
+        if isinstance(flight, flight_mod.FlightConfig):
+            flight = flight_mod.FlightRecorder(self.metrics, flight)
+        self.flight: Optional[flight_mod.FlightRecorder] = flight
         self._stack = None
 
     @property
@@ -118,9 +128,14 @@ class ServeCell:
         ``cell.hotswap``."""
         if self.watcher is None:
             return False
-        return hotswap_mod.poll_and_swap(
+        swapped = hotswap_mod.poll_and_swap(
             self.handle, self.watcher, self._watch_like, self._probe,
             metrics=self.metrics)
+        if self.flight is not None:
+            # a probe-parity failure bumps swap_failures; re-check the
+            # triggers now instead of waiting for the next hop
+            self.flight.check()
+        return swapped
 
 
 class StreamLanes:
@@ -180,6 +195,17 @@ class StreamLanes:
             return state, dstate, events
 
         self._joint = None if pipelined else jax.jit(joint)
+        if cell.flight is not None and cell.flight.stage_weights is None:
+            # static fallback attribution for flight dumps: the cost
+            # model's roofline-weighted stage split of exactly this hop
+            # program (lazy: traced only if a dump ever happens)
+            def _weights(eng=eng, fcfg=fcfg, k=chunk_hops,
+                         fi=feature_ingest):
+                from repro import perf
+                rep = perf.stream_hop_cost(eng, fcfg, batch=1,
+                                           chunk_hops=k, feature_ingest=fi)
+                return rep.stage_weights(perf.host_machine())
+            cell.flight.stage_weights = _weights
         self._det = jax.jit(lambda ds, lg, warm: det.detector_step(
             ds, stream_engine.posteriors(lg), dcfg, warm=warm)) \
             if pipelined else None
@@ -246,7 +272,10 @@ class StreamLanes:
                 stream_engine.window_frames(self.cell.engine.exec_cfg)
             self.dstate, events = self._det(self.dstate, logits, warm)
         events = jax.tree.map(np.asarray, jax.block_until_ready(events))
-        m.hop_ms.observe(1e3 * (time.perf_counter() - t0))
+        dur_ms = 1e3 * (time.perf_counter() - t0)
+        m.hop_ms.observe(dur_ms)
         m.hops.inc(int(np.sum(ingest)) if ingest is not None
                    else self.chunk_hops * self.n_active)
+        if self.cell.flight is not None:
+            self.cell.flight.record_hop(dur_ms)
         return events

@@ -147,9 +147,15 @@ def model_flops(cfg, shape) -> float:
 
 def roofline(cost: dict, n_chips: int) -> dict:
     """cost_analysis numbers are per-device (verified), so terms divide by
-    per-chip rates directly."""
-    compute_s = cost["flops"] / meshlib.PEAK_FLOPS_BF16
-    memory_s = cost["bytes"] / meshlib.HBM_BW
+    per-chip rates directly.  Thin wrapper over the shared
+    :data:`repro.perf.roofline.V5E` machine model (plus the ICI
+    collective term, which the two-ceiling model doesn't carry) —
+    hillclimb and the dry-run records keep this schema."""
+    from repro.perf import roofline as perf_roofline
+
+    v5e = perf_roofline.V5E
+    compute_s = cost["flops"] / v5e.peak_flops
+    memory_s = cost["bytes"] / v5e.mem_bw
     coll_s = cost["collective_bytes"] / meshlib.ICI_BW
     dominant = max(("compute", compute_s), ("memory", memory_s),
                    ("collective", coll_s), key=lambda kv: kv[1])[0]

@@ -35,8 +35,13 @@ def dp_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-# v5e hardware constants for the roofline (assignment spec)
-PEAK_FLOPS_BF16 = 197e12       # per chip
-PEAK_FLOPS_INT8 = 394e12
-HBM_BW = 819e9                 # B/s per chip
-ICI_BW = 50e9                  # B/s per link
+# v5e hardware constants, re-exported from the shared machine model in
+# repro.perf.roofline (V5E) so launch planning and the perf layer can
+# never disagree on the chip envelope.  ICI is launch-specific (the
+# two-ceiling roofline model has no interconnect term).
+from repro.perf.roofline import (          # noqa: E402
+    V5E_HBM_BW as HBM_BW,
+    V5E_ICI_BW as ICI_BW,
+    V5E_PEAK_FLOPS_BF16 as PEAK_FLOPS_BF16,
+    V5E_PEAK_FLOPS_INT8 as PEAK_FLOPS_INT8,
+)

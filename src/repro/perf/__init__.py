@@ -1,0 +1,39 @@
+"""repro.perf — the performance-accounting layer.
+
+The paper's claim structure is a cost ledger (per-op cycles, 26M →
+5.5M); this package gives every Engine plan the same treatment:
+
+* :mod:`repro.perf.cost` — static FLOPs / bytes-moved / arithmetic-
+  intensity model over compiled jaxprs, attributed to named stages
+  (unpack / featurise / embed / encode) and op classes (matmul /
+  softmax / gelu / norm / fft), with a paper-style estimated-cycles
+  column;
+* :mod:`repro.perf.roofline` — machine models (the paper's RV32 MCU,
+  TPU v5e datasheet, a *measured* calibration of the current host) and
+  the ``achieved_pct_of_roof`` / bound-verdict annotation every bench
+  row carries;
+* :mod:`repro.perf.ledger` — the append-only ``BENCH_history.jsonl``
+  with provenance, and the rolling-baseline regression gate behind
+  ``python -m repro.perf regress``.
+
+The serve-side counterpart is :class:`repro.telemetry.flight
+.FlightRecorder`, which uses :func:`cost.stream_hop_cost` stage weights
+to attribute anomalous hops post-mortem.
+"""
+
+from repro.perf.cost import (CostLine, CostReport, engine_cost,
+                             program_cost, stream_hop_cost)
+from repro.perf.ledger import (HISTORY_PATH, Verdict, append, entry,
+                               provenance, read, regress)
+from repro.perf.roofline import (PAPER_MCU, V5E, MachineModel,
+                                 annotate_row, calibrate, host_machine,
+                                 roofline_terms)
+
+__all__ = [
+    "CostLine", "CostReport", "engine_cost", "program_cost",
+    "stream_hop_cost",
+    "MachineModel", "PAPER_MCU", "V5E", "calibrate", "host_machine",
+    "annotate_row", "roofline_terms",
+    "HISTORY_PATH", "Verdict", "append", "entry", "provenance", "read",
+    "regress",
+]

@@ -1,0 +1,132 @@
+"""CLI: cost tables, host calibration, and the bench regression gate.
+
+    python -m repro.perf cost --arch kwt-tiny --backend lut [--mcu]
+    python -m repro.perf calibrate
+    python -m repro.perf regress [--history BENCH_history.jsonl]
+    python -m repro.perf regress --selftest
+
+``regress`` exits non-zero on any gated regression (CI's required
+step).  ``--selftest`` proves the gate can fail: it seeds a throwaway
+ledger with a healthy baseline plus a 2× latency regression and a
+1-byte ROM growth, and exits 0 only if the gate (a) trips on both and
+(b) passes once the regressions are removed — the same
+prove-the-checker-can-fail discipline as ``repro.analysis``'s mutation
+self-tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _cmd_cost(args) -> int:
+    import jax
+
+    from repro import perf, runtime
+    from repro.configs import registry
+    from repro.launch import steps
+
+    cfg = registry.get(args.arch).smoke if args.smoke \
+        else registry.get(args.arch)
+    params = steps.model_module(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    machine = perf.PAPER_MCU if args.mcu else perf.host_machine()
+    for backend in args.backends:
+        eng = runtime.compile_model(cfg, params, backend=backend)
+        rep = perf.engine_cost(eng, batch=args.batch)
+        print(f"\n## {args.arch} · backend={backend} · batch={args.batch} "
+              f"· machine={machine.name}")
+        print(rep.table(machine))
+        t = machine.time_s(rep.flops, rep.bytes)
+        print(f"roofline bound: {machine.verdict(rep.intensity)} "
+              f"(AI {rep.intensity:.2f} vs ridge {machine.ridge:.2f}), "
+              f"est {machine.cycles(rep.flops, rep.bytes):.3g} cycles "
+              f"({t * 1e6:.1f} us at {machine.clock_hz / 1e6:.0f} MHz)")
+    return 0
+
+
+def _cmd_calibrate(args) -> int:
+    from repro import perf
+
+    m = perf.calibrate(reps=args.reps)
+    print(json.dumps(m.to_dict(), indent=2))
+    print(f"ridge point: {m.ridge:.2f} flops/byte", file=sys.stderr)
+    return 0
+
+
+def _selftest() -> int:
+    """Seed a throwaway ledger; the gate must trip on a 2× latency and a
+    ROM-bytes regression, and pass with the regressions removed."""
+    from repro import perf
+
+    prov = {"git_commit": "selftest", "jax_version": "-", "device": "-",
+            "timestamp": "-", "calibration": None}
+    base = [perf.entry("kwt-tiny", "lut", 64, 600.0 + i, "us_per_forward",
+                       rom_bytes=1500, prov=prov) for i in range(3)]
+
+    with tempfile.TemporaryDirectory() as td:
+        bad = os.path.join(td, "bad.jsonl")
+        perf.append(bad, base + [perf.entry(
+            "kwt-tiny", "lut", 64, 1200.0, "us_per_forward",
+            rom_bytes=1501, prov=prov)])
+        v_bad = perf.regress(bad)
+        good = os.path.join(td, "good.jsonl")
+        perf.append(good, base + [perf.entry(
+            "kwt-tiny", "lut", 64, 610.0, "us_per_forward",
+            rom_bytes=1500, prov=prov)])
+        v_good = perf.regress(good)
+
+    ok = (len(v_bad.failures) == 2 and not v_bad.ok and v_good.ok)
+    print(v_bad.summary())
+    print(v_good.summary())
+    print(f"selftest: gate {'trips and clears as required' if ok else 'BROKEN'}")
+    return 0 if ok else 1
+
+
+def _cmd_regress(args) -> int:
+    from repro import perf
+
+    if args.selftest:
+        return _selftest()
+    v = perf.regress(args.history, tol=args.tol, window=args.window)
+    print(v.summary())
+    return 0 if v.ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.perf")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("cost", help="static cost table of an Engine plan")
+    c.add_argument("--arch", default="kwt-tiny")
+    c.add_argument("--backends", nargs="+", default=["lut"])
+    c.add_argument("--batch", type=int, default=1)
+    c.add_argument("--smoke", action="store_true",
+                   help="use the arch's smoke config")
+    c.add_argument("--mcu", action="store_true",
+                   help="price on the paper's RV32 MCU model instead of "
+                        "a calibrated host")
+    c.set_defaults(fn=_cmd_cost)
+
+    c = sub.add_parser("calibrate", help="measure this host's roofline")
+    c.add_argument("--reps", type=int, default=5)
+    c.set_defaults(fn=_cmd_calibrate)
+
+    c = sub.add_parser("regress", help="gate newest bench entries against "
+                                       "their rolling baselines")
+    c.add_argument("--history", default="BENCH_history.jsonl")
+    c.add_argument("--tol", type=float, default=0.15)
+    c.add_argument("--window", type=int, default=5)
+    c.add_argument("--selftest", action="store_true",
+                   help="prove the gate trips on a seeded 2x regression")
+    c.set_defaults(fn=_cmd_regress)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,188 @@
+"""Roofline machine models + host calibration for achieved-vs-peak rows.
+
+A :class:`MachineModel` is the three-number summary the roofline model
+needs — peak FLOP/s, memory bandwidth, and a clock for the paper-style
+estimated-cycles column.  Two canonical models ship:
+
+* :data:`PAPER_MCU` — a single-issue in-order RV32 at 250 MHz with a
+  4-byte/cycle memory port, the class of core the paper's cycle counts
+  come from (Table IX: 26M cycles baseline, 5.5M accelerated).  The
+  ``est_mcu_cycles`` column in BENCH_runtime.json prices each backend's
+  plan on this model so the repo's numbers land in the paper's units.
+* :data:`V5E` — TPU v5e datasheet numbers; ``launch.mesh`` re-exports
+  its constants so the launch-planning arithmetic and the perf layer
+  share one source of truth.
+
+:func:`calibrate` measures the *current host* instead of trusting a
+datasheet: a jitted matmul for peak FLOP/s and a streaming element-wise
+pass for memory bandwidth, best-of-``reps`` to strip scheduler noise.
+Benchmarks combine the calibrated model with the static cost model
+(:mod:`repro.perf.cost`) via :func:`roofline_terms` to stamp every
+sweep row with ``achieved_pct_of_roof`` and a compute-vs-memory-bound
+verdict — the achieved-vs-peak fraction the ROADMAP's Pallas item asks
+for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Peak envelope of one machine: the roofline's two ceilings + clock."""
+
+    name: str
+    peak_flops: float           # FLOP/s at the compute roof
+    mem_bw: float               # bytes/s at the memory roof
+    clock_hz: float = 1e9      # for the estimated-cycles column
+    source: str = "datasheet"  # "datasheet" | "measured"
+
+    @property
+    def ridge(self) -> float:
+        """Arithmetic intensity (flops/byte) where the roofs intersect."""
+        return self.peak_flops / self.mem_bw if self.mem_bw else 0.0
+
+    def attainable(self, intensity: float) -> float:
+        """Roofline ceiling (FLOP/s) at the given arithmetic intensity."""
+        return min(self.peak_flops, intensity * self.mem_bw)
+
+    def verdict(self, intensity: float) -> str:
+        return "compute-bound" if intensity >= self.ridge else "memory-bound"
+
+    def time_s(self, flops: float, bytes_moved: float) -> float:
+        """Roofline time bound: the slower of the compute and memory
+        terms (perfect overlap of the two pipes)."""
+        t = 0.0
+        if self.peak_flops:
+            t = flops / self.peak_flops
+        if self.mem_bw:
+            t = max(t, bytes_moved / self.mem_bw)
+        return t
+
+    def cycles(self, flops: float, bytes_moved: float) -> float:
+        """Estimated clock cycles of (flops, bytes) on this machine —
+        the unit of the paper's Table IX ledger."""
+        return self.time_s(flops, bytes_moved) * self.clock_hz
+
+    @property
+    def id(self) -> str:
+        """Short provenance identity for ledger entries."""
+        return (f"{self.name}:{self.peak_flops:.3g}F/"
+                f"{self.mem_bw:.3g}B@{self.clock_hz:.3g}Hz")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# The paper's deployment class: single-issue in-order RV32 (Ibex-like),
+# 1 MAC-class op/cycle, a 32-bit memory port (4 B/cycle).  250 MHz is a
+# nominal embedded clock — cycles, not seconds, are the comparable unit.
+PAPER_MCU = MachineModel(name="rv32-mcu", peak_flops=250e6 * 1.0,
+                         mem_bw=250e6 * 4.0, clock_hz=250e6)
+
+# TPU v5e datasheet envelope (single chip).  launch.mesh re-exports
+# these so dryrun cost arithmetic and perf share one source.
+V5E_PEAK_FLOPS_BF16 = 197e12
+V5E_PEAK_FLOPS_INT8 = 394e12
+V5E_HBM_BW = 819e9
+V5E_ICI_BW = 50e9
+V5E = MachineModel(name="tpu-v5e", peak_flops=V5E_PEAK_FLOPS_BF16,
+                   mem_bw=V5E_HBM_BW, clock_hz=940e6)
+
+
+# -- host calibration -------------------------------------------------------
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(n: int = 1024, stream_mb: int = 64,
+              reps: int = 5) -> MachineModel:
+    """Measure the current host's roofline envelope.
+
+    * peak FLOP/s: jitted ``n×n @ n×n`` float32 matmul (XLA's best
+      dense kernel on every backend) → ``2n³ / best_time``;
+    * memory bandwidth: jitted ``x + 1`` over a ``stream_mb``-MB array,
+      far past any cache → ``(read + write) / best_time``.
+
+    Best-of-``reps`` strips scheduler noise; both programs are warmed
+    before timing so compile time never pollutes the envelope.  The
+    result is *measured attainable* peak, which is the honest roof for
+    ``achieved_pct_of_roof`` — a datasheet roof no kernel can reach
+    would make every row look artificially bad.
+    """
+    a = jnp.ones((n, n), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    jax.block_until_ready(mm(a))                      # compile
+    peak = 2.0 * n ** 3 / _best_of(lambda: mm(a), reps)
+
+    m = stream_mb * (1 << 20) // 4
+    x = jnp.ones((m,), jnp.float32)
+    add = jax.jit(lambda v: v + 1.0)
+    jax.block_until_ready(add(x))
+    bw = 2.0 * 4.0 * m / _best_of(lambda: add(x), reps)
+
+    return MachineModel(name=f"measured-{jax.default_backend()}",
+                        peak_flops=peak, mem_bw=bw, clock_hz=1e9,
+                        source="measured")
+
+
+_CACHED: dict = {}
+
+
+def host_machine(refresh: bool = False) -> MachineModel:
+    """Process-cached :func:`calibrate` — benchmarks calibrate once and
+    stamp every row of a sweep with the same machine identity."""
+    if refresh or "m" not in _CACHED:
+        _CACHED["m"] = calibrate()
+    return _CACHED["m"]
+
+
+# -- row annotation ---------------------------------------------------------
+
+def roofline_terms(flops: float, bytes_moved: float, measured_s: float,
+                   machine: MachineModel) -> dict:
+    """The columns every sweep row carries: modelled cost, achieved
+    throughput against the machine's roof at this program's arithmetic
+    intensity, and the compute-vs-memory-bound verdict.
+
+    ``achieved_pct_of_roof`` > 100% is meaningful, not an error: the
+    cost model's traffic term counts every operand/result byte, but a
+    cache-resident working set (KWT-Tiny's is a few KB) never pays the
+    measured DRAM bandwidth, so the intensity-limited roof underprices
+    the machine.  ``achieved_pct_of_peak`` is the unconditional
+    achieved-vs-compute-peak fraction (the ROADMAP's column) and is the
+    number to watch for "how far from as-fast-as-the-hardware-allows".
+    """
+    ai = flops / bytes_moved if bytes_moved else 0.0
+    roof = machine.attainable(ai)
+    achieved = flops / measured_s if measured_s > 0 else 0.0
+    return {
+        "flops": round(flops),
+        "bytes_moved": round(bytes_moved),
+        "arithmetic_intensity": round(ai, 4),
+        "achieved_flops_per_s": round(achieved),
+        "achieved_pct_of_roof": round(100.0 * achieved / roof, 2)
+        if roof else 0.0,
+        "achieved_pct_of_peak": round(100.0 * achieved
+                                      / machine.peak_flops, 3)
+        if machine.peak_flops else 0.0,
+        "bound": machine.verdict(ai),
+    }
+
+
+def annotate_row(row: dict, cost, measured_s: float,
+                 machine: MachineModel) -> dict:
+    """Merge :func:`roofline_terms` for a CostReport into ``row``."""
+    row.update(roofline_terms(cost.flops, cost.bytes, measured_s, machine))
+    return row

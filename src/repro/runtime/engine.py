@@ -273,11 +273,14 @@ class Engine:
         (the lut/pallas weight path) rather than a dequantised float copy."""
         return _has_qtensors(self.params)
 
-    def describe(self, analyze: bool = False) -> str:
+    def describe(self, analyze: bool = False, cost: bool = False) -> str:
         """One-line plan summary.  ``analyze=True`` appends the static-
         analysis verdict (repro.analysis), running the pass pipeline on
         first use; a verdict cached by an earlier ``check_engine`` call
-        is appended either way."""
+        is appended either way.  ``cost=True`` appends the static cost
+        model's totals (repro.perf) plus the paper-style per-(stage, op)
+        table priced on the RV32 MCU model — the one-stop answer to
+        "what does this plan cost and where"."""
         if analyze and not hasattr(self, "_analysis_verdict"):
             from repro import analysis
             analysis.check_engine(self)
@@ -292,9 +295,18 @@ class Engine:
             f", attn={self.exec_cfg.attn_impl}"
         verdict = getattr(self, "_analysis_verdict", None)
         verdict = f" | {verdict}" if verdict else ""
-        return (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
+        line = (f"Engine[{self.backend.name}] {self.exec_cfg.name}: "
                 f"params {self.param_bytes} B, rom {self.rom_bytes} B, "
                 f"lut {self.lut_bytes} B{q}{interp}{attn}{verdict}")
+        if cost:
+            from repro import perf
+            rep = perf.engine_cost(self, batch=1)
+            mcu = perf.PAPER_MCU
+            line += (f" | cost/fwd: {rep.flops:.0f} flops, "
+                     f"{rep.bytes:.0f} B moved, AI {rep.intensity:.2f}, "
+                     f"~{mcu.cycles(rep.flops, rep.bytes):.3g} "
+                     f"{mcu.name} cycles\n" + rep.table(mcu))
+        return line
 
     def _require_kwt(self, what: str):
         if self.exec_cfg.family != "kwt":

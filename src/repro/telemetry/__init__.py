@@ -10,6 +10,9 @@ Three layers (see README §repro.telemetry):
 * :mod:`repro.telemetry.taps`    — in-graph quantisation-health statistics
   collected by the Engine's opt-in ``compile_model(..., taps=True)`` aux
   program (int8 saturation, LUT out-of-domain fractions, Q8.24 headroom).
+* :mod:`repro.telemetry.flight`  — a bounded flight recorder for the
+  serving cell: last-N-hops ring + anomaly-triggered post-mortem dumps
+  with cost-model stage attribution (see README §repro.perf).
 
 :func:`annotate` names a stage *inside* a jitted program (a
 ``jax.named_scope`` pass-through): metadata-only, shows up in jaxprs /
@@ -20,6 +23,7 @@ from jax import named_scope as annotate
 
 from repro.telemetry import taps
 from repro.telemetry.cell import CellMetrics, make_cell_metrics
+from repro.telemetry.flight import FlightConfig, FlightRecorder, HopRecord
 from repro.telemetry.check import (
     TelemetryFormatError,
     validate_chrome_trace,
@@ -49,8 +53,11 @@ __all__ = [
     "NOOP_SPAN",
     "CellMetrics",
     "Counter",
+    "FlightConfig",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
+    "HopRecord",
     "Registry",
     "TelemetryFormatError",
     "Tracer",

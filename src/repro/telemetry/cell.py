@@ -41,6 +41,7 @@ class CellMetrics:
     hop_ms: Histogram         # cell_hop_latency_ms
     decode_ms: Histogram      # cell_decode_latency_ms
     prefill_ms: Histogram     # cell_prefill_latency_ms
+    latency_budget: Gauge     # cell_latency_budget_ms (SLO; 0 = unset)
 
     # checkpoint hot-swap (cell.hotswap)
     swaps: Counter            # cell_swaps_total
@@ -82,6 +83,10 @@ def make_cell_metrics(registry: Registry) -> CellMetrics:
         prefill_ms=registry.histogram("cell_prefill_latency_ms",
                                       "LM join prefill wall time",
                                       unit="ms"),
+        latency_budget=registry.gauge(
+            "cell_latency_budget_ms",
+            "per-hop latency SLO; the flight recorder burns against "
+            "this (0 = no budget set)"),
         swaps=registry.counter("cell_swaps_total",
                                "checkpoint hot-swaps completed"),
         swap_failures=registry.counter(

@@ -51,10 +51,15 @@ def latency_summary(samples, *, unit: str = "us", count: int | None = None,
     ``samples`` is any sequence of per-call latencies in ``unit``;
     ``count``/``total`` override n / sum when the samples are a reservoir
     of a longer-running stream.
+
+    Empty input is a real serving state (a cold cell exporting metrics
+    before first traffic): the summary reports ``n=0`` with zeroed
+    stats rather than raising from numpy quantiles over an empty ring.
     """
     a = np.asarray(list(samples), np.float64)
     if a.size == 0:
-        a = np.zeros((1,))
+        return {"n": int(count or 0), f"mean_{unit}": 0.0,
+                f"p50_{unit}": 0.0, f"p95_{unit}": 0.0, f"p99_{unit}": 0.0}
     p50, p95, p99 = np.percentile(a, [50, 95, 99])
     return {"n": int(count if count is not None else a.size),
             f"mean_{unit}": round(float(np.mean(a)), 4),
