@@ -54,17 +54,16 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     serve (runtime.compile_model on KWT-Tiny), emitted as JSON.
 
     Timing protocol: ``warmup`` calls are discarded (compile + cache
-    effects), then ``reps`` calls are timed in aggregate
-    (``us_per_forward``, the historical trajectory figure) and ``reps``
-    more are timed per call with a sync each — those samples feed the
-    telemetry latency schema (``mean_us``/``p50_us``/``p95_us``/
-    ``p99_us``, the same field names the serve metrics export).
+    effects), then ``reps`` calls are timed per call with a sync each —
+    those samples feed the telemetry latency schema (``mean_us``/
+    ``p50_us``/``p95_us``/``p99_us``, the same field names the serve
+    metrics export; ``mean_us`` is the trajectory + ledger figure).
 
     A final traced pass (``telemetry.tracing``) attributes each forward
-    to its stage spans: ``unpack_us`` (jitted QTensor dequant — the cost
-    ``lut`` pays over ``float``; the ROADMAP full-integer item exists to
-    delete it) and ``encode_us`` (the model executable), plus
-    ``span_coverage_pct`` (named children / forward wall time) and
+    to its stage spans: ``unpack_us`` (jitted QTensor dequant — 0 for
+    integer-executing plans, which have no unpack stage at all) and
+    ``encode_us`` (the model executable), plus ``span_coverage_pct``
+    (named children / forward wall time) and
     ``telemetry_overhead_pct`` (traced vs untraced per-call mean).
 
     ``packed_rom_bytes`` is the TRUE packed integer weight image
@@ -85,7 +84,9 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     ``est_mcu_cycles``: the per-sample plan priced on the paper's RV32
     MCU model, the unit of the paper's 26M → 5.5M ledger.  With
     ``history`` set, every row is also appended to the bench ledger
-    (``repro.perf.ledger``) for the CI regression gate."""
+    (``repro.perf.ledger``) for the CI regression gate, plus a derived
+    ``lut_over_float`` ratio entry (lut mean_us / float mean_us) so the
+    gate guards the int-exec plan staying FASTER than float."""
     import numpy as np
 
     from repro import analysis, perf, runtime, telemetry
@@ -101,26 +102,32 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
     plans = [(name, None) for name in runtime.available_backends()]
     plans.append(("lut", runtime.QuantRecipe.from_config(
         cfg, bits=4).calibrated(params)))          # the int4 storage row
-    results = []
+    # Compile + warm every plan FIRST, then round-robin the timed reps
+    # across all of them.  On a shared CI core, sequential per-backend
+    # windows alias scheduler noise onto whichever backend ran during a
+    # burst — the gated lut/float ratio flipped sign run-to-run.
+    # Interleaving makes each backend's samples face the same noise
+    # process, so cross-backend ratios are paired statistics.
+    engines = []
     for name, recipe in plans:
         eng = runtime.compile_model(cfg, params, backend=name, recipe=recipe)
         for _ in range(max(warmup, 1)):              # compile + warm, discard
             jax.block_until_ready(eng.forward(x))
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            outp = eng.forward(x)
-        jax.block_until_ready(outp)
-        us = (time.perf_counter() - t0) / reps * 1e6
-        samples = []                                 # per-call, synced
-        for _ in range(reps):
+        engines.append((name, recipe, eng, []))
+    for _ in range(reps):
+        for _, _, eng, samples in engines:           # per-call, synced
             t1 = time.perf_counter()
             jax.block_until_ready(eng.forward(x))
             samples.append((time.perf_counter() - t1) * 1e6)
+    results = []
+    for name, recipe, eng, samples in engines:
         lat = telemetry.latency_summary(samples, unit="us")
+        us = lat["mean_us"]
         with telemetry.tracing() as tr:              # stage attribution
             for _ in range(reps):
                 eng.forward(x)
-        unpack_us = float(np.mean(tr.durations_us("unpack")))
+        ups = tr.durations_us("unpack")              # absent for int-exec
+        unpack_us = float(np.mean(ups)) if len(ups) else 0.0
         encode_us = float(np.mean(tr.durations_us("encode")))
         traced_us = float(np.median(tr.durations_us("forward")))
         coverage = telemetry.span_coverage(tr, "forward")
@@ -134,7 +141,7 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
         ram = rep.result("budget").metrics["total_bytes"]
         cost = perf.engine_cost(eng, batch=batch)
         cost1 = perf.engine_cost(eng, batch=1)     # per-sample, MCU units
-        row = {"backend": label, "us_per_forward": round(us, 1),
+        row = {"backend": label,
                **lat,
                **perf.roofline_terms(cost.flops, cost.bytes, us / 1e6,
                                      machine),
@@ -149,7 +156,8 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
                "packed_rom_bytes": eng.rom_bytes,
                "lut_bytes": eng.lut_bytes,
                "param_bytes": eng.param_bytes,
-               "int_resident": eng.int_resident, "bits": bits,
+               "int_resident": eng.int_resident,
+               "int_exec": eng.int_exec, "bits": bits,
                "float_leak_count": leaks,
                "ram_budget_bytes": ram,
                "analysis_ok": rep.ok}
@@ -168,9 +176,9 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}", file=sys.stderr)
     if history:
-        n = perf.append(history, [
+        entries = [
             perf.entry("kwt-tiny", r["backend"], batch,
-                       r["us_per_forward"], "us_per_forward",
+                       r["mean_us"], "mean_us",
                        rom_bytes=r["packed_rom_bytes"],
                        extra={"achieved_pct_of_roof":
                               r["achieved_pct_of_roof"],
@@ -179,7 +187,18 @@ def bench_backend_sweep(out_path: str = "BENCH_runtime.json",
                               "bound": r["bound"],
                               "est_mcu_cycles": r["est_mcu_cycles"]},
                        prov=prov)
-            for r in results])
+            for r in results]
+        by_backend = {r["backend"]: r for r in results}
+        if "float" in by_backend and "lut" in by_backend:
+            # the int-exec acceptance as a guarded ledger figure: lut
+            # beating float means ratio < 1, and `perf regress` flags
+            # any >15% growth — the unpack-tax win cannot silently rot
+            ratio = by_backend["lut"]["mean_us"] / \
+                by_backend["float"]["mean_us"]
+            entries.append(perf.entry(
+                "kwt-tiny", "lut_over_float", batch, round(ratio, 4),
+                "ratio_mean_us", rom_bytes=0, prov=prov))
+        n = perf.append(history, entries)
         print(f"appended {n} entries to {history}", file=sys.stderr)
     return report
 

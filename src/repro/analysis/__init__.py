@@ -41,8 +41,13 @@ def example_input(cfg, batch: int = 1):
 
 
 def check_engine(engine, x=None, passes=PASSES,
-                 budget: int | None = None) -> Report:
+                 budget: int | None = None, strict: bool = False) -> Report:
     """Run the pass pipeline over one Engine plan.
+
+    ``strict=True`` hardens the residency pass into the full-integer
+    gate: the plan must be integer-executing with ``float_leak_count``
+    zero and no whole-tensor float weight views (residency module
+    docstring).
 
     Caches the one-line verdict on the Engine so ``describe()`` reports
     it (``Engine.describe(analyze=True)`` calls back into here).
@@ -55,7 +60,8 @@ def check_engine(engine, x=None, passes=PASSES,
     results = []
     for name in passes:
         if name == "residency":
-            results.append(residency.check_residency(engine, x))
+            results.append(residency.check_residency(engine, x,
+                                                     strict=strict))
         elif name == "ranges":
             results.append(ranges.check_ranges(engine, x))
         elif name == "budget":

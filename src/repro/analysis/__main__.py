@@ -48,6 +48,10 @@ def main(argv=None) -> int:
     chk.add_argument("--mutate", default="none",
                      choices=("none",) + mutations.MUTATIONS,
                      help="seed a known violation (checker self-test)")
+    chk.add_argument("--strict", action="store_true",
+                     help="full-integer gate: residency pass demands an "
+                          "integer-executing plan with float_leak_count==0 "
+                          "and no whole-tensor float weight views")
     chk.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -55,7 +59,7 @@ def main(argv=None) -> int:
         engine = _build_engine(args.config, args.backend, args.seed)
         report = analysis.check_engine(
             engine, passes=tuple(args.passes.split(",")),
-            budget=args.budget)
+            budget=args.budget, strict=args.strict)
     print(report.render())
     if args.mutate != "none":
         print(f"[mutation {args.mutate!r} seeded: "

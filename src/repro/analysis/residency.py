@@ -9,27 +9,45 @@ every ``convert_element_type`` to float that is reachable from them.
 Two programs are analysed per integer-resident plan:
 
   * the **unpack stage** (``Engine.live_params``'s jitted
-    ``quant.dequantize_tree``) — the separate executable the Engine runs
-    per call.  Every int->float cast here is the PR-5 "hidden unpack"
-    leak: the weights are integer-*resident* but the model still consumes
-    a float view.  These are whitelisted with a report line (the
-    bit-identity contract mandates the separate stage today) and counted
-    as ``float_leak_count`` — the number that must reach zero for the
-    ROADMAP "full-integer execution" item.
+    ``quant.dequantize_tree``) — the separate executable a
+    non-executing resident Engine runs per call.  Every int->float cast
+    here is the PR-5 "hidden unpack" leak: the weights are
+    integer-*resident* but the model still consumes a float view.
+    These are whitelisted with a report line and counted as
+    ``float_leak_count``.  Integer-EXECUTING plans (``engine.int_exec``)
+    have no unpack stage at all, so the count is zero by construction —
+    the ROADMAP "full-integer execution" criterion.
 
   * the **in-module resident program** (the model forward traced directly
-    on the packed tree, the path fused-jit drivers and the future
-    integer-executing plan take).  Sanctioned casts are classified by
-    their trace-time call stack:
+    on the packed tree — the path integer-executing plans and fused-jit
+    drivers take).  Sanctioned casts are classified by their trace-time
+    call stack:
 
       - frames through ``quant.resident_values`` — the po2 weight
         de-scale epilogue (exact, fusion-isolated); whitelisted.
+      - frames through ``quant.int_container`` — value-preserving
+        int->f32 container move for exact integer GEMM (the f32
+        mantissa holds the int8 grid exactly); whitelisted.
+      - frames through ``quant.requant`` / ``kernels.ops.int8_matmul``
+        — the per-channel po2 requant epilogue on an integer
+        accumulator; whitelisted.
+      - frames through ``quant.gather_descale`` — row-wise embedding
+        descale (only looked-up rows leave integer form); whitelisted.
       - frames through ``fixedpoint.to_float`` — the Q8.24 pipeline's
         exit boundary (the jnp reference's emulation of the device's
         ALU_TO_FLOAT instruction); whitelisted.
 
     Anything else tainted that converts an integer to a float is a
     **violation**: an unsanctioned dequantisation snuck into the plan.
+
+**Strict mode** (``check_residency(..., strict=True)``, CLI
+``python -m repro.analysis --strict``) asserts the FULL-integer claim:
+the plan must be integer-executing, ``float_leak_count`` must be zero,
+and whole-tensor weight descales feeding float einsums
+(``quant.qt_einsum``'s float view) are violations even though plain
+resident mode sanctions them — the only sanctioned float views left are
+the additive-consumption leaves (positional tables) and the requant /
+container / gather epilogues above.
 """
 
 from __future__ import annotations
@@ -45,6 +63,14 @@ from repro.analysis.report import Finding, PassResult
 _WHITELIST = (
     ("resident_values", "weight-descale",
      "po2 de-scale epilogue (exact, fusion-isolated)"),
+    ("int_container", "int-container",
+     "value-preserving int->f32 container move (exact integer GEMM)"),
+    ("int8_matmul", "requant-epilogue",
+     "per-channel po2 requant of the kernel's integer accumulator"),
+    ("requant", "requant-epilogue",
+     "per-channel po2 requant of the integer accumulator"),
+    ("gather_descale", "gather-descale",
+     "row-wise embedding descale (looked-up rows only)"),
     ("to_float", "q824-boundary",
      "Q8.24 pipeline exit (ALU_TO_FLOAT reference)"),
 )
@@ -110,8 +136,12 @@ def _collect(fn, *args):
     return hits
 
 
-def check_residency(engine, x) -> PassResult:
-    """Residency lint over the plan's forward program(s) at input ``x``."""
+def check_residency(engine, x, strict: bool = False) -> PassResult:
+    """Residency lint over the plan's forward program(s) at input ``x``.
+
+    ``strict=True`` asserts the full-integer claim (see module
+    docstring): non-executing plans and whole-tensor float weight views
+    become violations, and ``float_leak_count`` must be zero."""
     from repro.core import quant
 
     findings = []
@@ -124,22 +154,37 @@ def check_residency(engine, x) -> PassResult:
             f"backend {engine.backend_name!r} registers int_resident but the "
             "deployed tree holds no stored-integer leaves (family "
             f"{engine.exec_cfg.family!r} falls back to dequantise-first)"))
+    if strict and not engine.int_exec:
+        findings.append(Finding(
+            "violation", "strict-mode",
+            f"strict residency demands an integer-executing plan; "
+            f"backend {engine.backend_name!r} planned "
+            f"{'resident (dequantise-per-call)' if holds else 'float'} "
+            "execution"))
     if not holds:
         findings.append(Finding(
             "info", "residency-claim",
             "plan deploys a float tree; no integer storage to leak"))
         return PassResult("residency", findings, metrics)
 
-    # (a) the separate unpack stage the Engine actually executes per call
-    unpack_hits = _collect(quant.dequantize_tree, engine.params)
-    metrics["float_leak_count"] = len(unpack_hits)
-    findings.append(Finding(
-        "whitelisted", "unpack-stage",
-        f"{len(unpack_hits)} int->float cast(s) in the separate jitted "
-        "unpack stage (Engine.live_params): the plan is integer-RESIDENT "
-        "but not integer-EXECUTING — this is the lut backend's known "
-        "per-call float materialisation; zero when the full-integer "
-        "forward lands (ROADMAP)"))
+    if engine.int_exec:
+        # Integer-executing plans run the model straight on the packed
+        # tree: there is no per-call unpack stage to leak through, so
+        # float_leak_count is zero by construction.
+        findings.append(Finding(
+            "info", "unpack-stage",
+            "no unpack stage: the plan is integer-executing (the model "
+            "consumes the packed tree directly)"))
+    else:
+        # (a) the separate unpack stage the Engine executes per call
+        unpack_hits = _collect(quant.dequantize_tree, engine.params)
+        metrics["float_leak_count"] = len(unpack_hits)
+        findings.append(Finding(
+            "whitelisted", "unpack-stage",
+            f"{len(unpack_hits)} int->float cast(s) in the separate jitted "
+            "unpack stage (Engine.live_params): the plan is integer-RESIDENT "
+            "but not integer-EXECUTING — the per-call float materialisation "
+            "the int-exec plan flavour eliminates"))
 
     # (b) the in-module resident program: forward on the packed tree
     cfg = engine.exec_cfg
@@ -158,6 +203,14 @@ def check_residency(engine, x) -> PassResult:
     for prog_name, fn, arg in programs:
         for eqn in _collect(fn, engine.params, arg):
             kind, why = _classify(eqn)
+            if (strict and kind == "weight-descale"
+                    and "qt_einsum" in jw.frame_functions(eqn)):
+                # A whole-tensor descale feeding a float einsum: the
+                # qt_einsum fallback path.  Plain resident mode sanctions
+                # it; under the full-integer claim it is a leak (only
+                # additive-consumption descales, e.g. positional tables,
+                # stay whitelisted).
+                kind = None
             src, dst = eqn.invars[0].aval, eqn.outvars[0].aval
             desc = (f"{prog_name}: {src.dtype}{list(src.shape)} -> "
                     f"{dst.dtype}")

@@ -77,6 +77,10 @@ class ModelConfig:
     act_approx: str = "exact"     # exact | lut | pallas
     kernel_interpret: bool = True  # pallas modes: interpret vs Mosaic,
     #                                decided ONCE at plan time, not per call
+    int_exec: bool = False        # integer-executing plan: linear layers
+    #                               quantise activations (eq 9) and run the
+    #                               stored int payload directly; pinned by
+    #                               runtime.compile_model, never set by hand
     quant: Optional[QuantConfig] = None
     # --- compile / distribution knobs ---
     remat: bool = True

@@ -147,7 +147,7 @@ def softmax_lut(x: jnp.ndarray, axis: int = -1, *, fixed: bool = False,
     s_q = jnp.sum(_pre_shift(num_q, pre), axis=axis, keepdims=True)  # Q8.(24-pre)
     inv_q = lutlib.reciprocal_q24(s_q, bank, range_reduce=range_reduce)
     inv_q = inv_q >> pre                                          # back to Q8.24
-    out_q = fxp.fixed_mul(num_q, inv_q)
+    out_q = fxp.fixed_mul(num_q, inv_q, nonneg=True)
     return fxp.to_float(out_q)
 
 
@@ -252,7 +252,7 @@ def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray | None,
             s_q = jnp.sum(_pre_shift(num_q, pre), axis=-1, keepdims=True)
             s_q = jnp.maximum(s_q, 1)
             inv_q = lutlib.reciprocal_q24(s_q, bank) >> pre
-            return fxp.to_float(fxp.fixed_mul(num_q, inv_q))
+            return fxp.to_float(fxp.fixed_mul(num_q, inv_q, nonneg=True))
     else:
         raise ValueError(f"unknown softmax mode {mode!r}")
     # STE: the approx pipeline verbatim in the forward pass, the exact

@@ -37,16 +37,29 @@ def to_float(q: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * (1.0 / float(ONE))
 
 
-def fixed_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+def fixed_mul(a: jnp.ndarray, b: jnp.ndarray, *,
+              nonneg: bool = False) -> jnp.ndarray:
     """Q8.24 multiply, exact for |a|,|b| <= 1.0 (24-bit magnitudes).
 
     (a * b) >> 24 via 12/12 limb split so every partial product fits int32:
       a = ah*2^12 + al,  b = bh*2^12 + bl   (ah,bh <= 2^12 when |x|<=1)
       (a*b)>>24 = ah*bh + ((ah*bl + al*bh) >> 12) + ((al*bl) >> 24)
+
+    ``nonneg=True`` asserts both operands are >= 0 (the SoftMax
+    normalise: e^{-z} in [0,1] times 1/sum in (0,1]) and skips the
+    sign/abs handling — identical results on that domain, ~40% fewer
+    VPU ops on the hot [*, K, K] normalise.
     """
-    sign = jnp.sign(a.astype(jnp.int32)) * jnp.sign(b.astype(jnp.int32))
-    ma = jnp.abs(a).astype(jnp.int32)
-    mb = jnp.abs(b).astype(jnp.int32)
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    if nonneg:
+        ah, al = a32 >> 12, a32 & 0xFFF
+        bh, bl = b32 >> 12, b32 & 0xFFF
+        prod = ah * bh + ((ah * bl + al * bh) >> 12) + ((al * bl) >> 24)
+        return prod.astype(jnp.int32)
+    sign = jnp.sign(a32) * jnp.sign(b32)
+    ma = jnp.abs(a32)
+    mb = jnp.abs(b32)
     ah, al = ma >> 12, ma & 0xFFF
     bh, bl = mb >> 12, mb & 0xFFF
     prod = ah * bh + ((ah * bl + al * bh) >> 12) + ((al * bl) >> 24)

@@ -270,6 +270,223 @@ def qt_einsum(eq: str, x: jnp.ndarray, w: QTensor) -> jnp.ndarray:
     return jnp.einsum(eq, x, resident_values(w))
 
 
+# ---------------------------------------------------------------------------
+# Full-integer execution: eq-9 activation quantiser + integer-executing
+# einsum over the STORED payload (no float weight view, no unpack stage).
+# The function names below are load-bearing: analysis.residency whitelists
+# int->float casts by trace-time frame (`int_container` / `requant` /
+# `gather_descale`), and perf.cost prices their ops as the `requant` class.
+# ---------------------------------------------------------------------------
+
+# f32 holds every integer up to 2^24 exactly; while K * 2^(xbits-1) *
+# 2^(wbits-1) stays under this, an f32 GEMM over integer grids is
+# bit-equal to int32 accumulation (measured ~1.7x faster than XLA:CPU's
+# int8 dot_general at KWT shapes — the win the lut backend banks on).
+_F32_EXACT = 1 << 24
+
+# Below this many MACs a contraction is dispatch-dominated on XLA:CPU
+# (an Eigen dot thunk + its weight-convert thunk cost more than the math);
+# int_exec_einsum emits a fusable multiply-reduce instead.
+_SMALL_MACS = 8192
+
+
+def matmul_unrolled(xq: jnp.ndarray, wi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """K-loop of a trivial contraction unrolled into elementwise
+    multiply-adds (the named frame lets repro.perf price the chain as
+    matmul MACs rather than loose elementwise ops)."""
+    acc = xq[..., 0:1] * wi[0]
+    for i in range(1, k):
+        acc = acc + xq[..., i:i + 1] * wi[i]
+    return acc
+
+
+def quantize_act(x: jnp.ndarray, exponent: int, *, bits: int = 8
+                 ) -> jnp.ndarray:
+    """eq 9 applied to a linear-layer input: the jitted per-layer
+    activation quantiser of the integer-executing pipeline.
+
+    Same semantics as the PTQ/QAT weight cast (``quantize_po2`` /
+    ``recipe.po2_fake_quant`` with nearest rounding): scale by the
+    power-of-2 input exponent (Table V: 2^5), floor with the half-LSB
+    offset, saturate at the ``bits``-wide edges.  Returns the integer
+    GRID in an f32 container (values in [lo, hi], exactly representable)
+    so the downstream matmul runs exact integer math without an
+    int->float cast in the plan.
+    """
+    lo, hi = int_range(bits)
+    q = jnp.floor(x.astype(jnp.float32) * jnp.float32(2.0 ** exponent) + 0.5)
+    return jnp.clip(q, lo, hi)
+
+
+def int_container(w: QTensor) -> jnp.ndarray:
+    """The stored integer grid in an f32 container — value-preserving
+    (every ``bits``-wide integer is exact in f32), NOT a dequantisation:
+    no scale is applied, the values stay on the integer lattice.  Named
+    so the residency pass can tell this container widening apart from a
+    float weight view."""
+    return w.int_values().astype(jnp.float32)
+
+
+def requant(acc: jnp.ndarray, x_exp: int, w_exp: int,
+            axis_exponents: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Power-of-2 requantisation epilogue of the integer matmul: descale
+    the accumulator by 2^-(x_exp+w_exp), then the per-output-channel
+    refinements.  All multiplications are by powers of two — exact in
+    f32 — so jnp and Pallas realisations produce bit-identical floats."""
+    if jnp.issubdtype(acc.dtype, jnp.integer):
+        acc = acc.astype(jnp.float32)
+    out = acc * jnp.float32(2.0 ** (-(x_exp + w_exp)))
+    if axis_exponents is not None:
+        out = out * jnp.exp2(-axis_exponents.astype(jnp.float32))
+    return out
+
+
+def int_exec_supported(w, eq: str) -> bool:
+    """Can ``int_exec_einsum`` run ``eq`` against ``w`` integer-only?
+
+    Supported: rank-2 weights contracted on the activation's last axis,
+    weight-first (``bsd,df->bsf``-family) or weight-last (the tied-
+    embedding head ``...d,vd->...v``).  Per-channel ``axis_exponents``
+    live on the weight's LAST axis, so the weight-last layout puts them
+    on the contraction axis where they cannot fold into a post-matmul
+    epilogue — those fall back to the float-view path (documented LM
+    tied-head exception).
+    """
+    if not isinstance(w, QTensor) or len(w.shape) != 2:
+        return False
+    lhs, rhs = eq.split("->")[0].split(",")
+    if len(rhs) != 2:
+        return False
+    if rhs[0] == lhs[-1]:                 # weight-first: per-channel
+        return True                       # exps fold into the epilogue
+    if rhs[1] == lhs[-1]:                 # weight-last (tied head)
+        return w.axis_exponents is None
+    return False
+
+
+def int_exec_einsum(eq: str, x: jnp.ndarray, w: QTensor, *,
+                    x_exp: int, x_bits: int = 8, residual_bits: int = 16,
+                    use_kernel: bool = False, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """Integer-executing linear layer: quantise the activation (eq 9),
+    multiply against the STORED int8 / nibble-packed int4 payload, clip
+    to the paper's INT16 residual, requantise.  No ``dequantize_tree``
+    stage, no float weight view — the only float-producing op in the
+    plan is the exact po2 :func:`requant` epilogue.
+
+    ``use_kernel`` routes the matmul through the Pallas int8 x int8 ->
+    int32 kernel (``kernels.ops.int8_matmul``) — the compiled-Mosaic
+    path.  In interpret mode the jnp realisation below IS the kernel's
+    reference semantics (same integer accumulation, same int16 clip,
+    same epilogue order), bit-identical by construction and without the
+    kernel's (8,128)/(128,128) padding round-trip per call.
+    """
+    lhs, rhs = eq.split("->")[0].split(",")
+    transpose_w = rhs[0] != lhs[-1]       # weight-last (tied head) layout
+    k = int(x.shape[-1])
+    xq = quantize_act(x, x_exp, bits=x_bits)
+    if use_kernel and not interpret and not transpose_w:
+        from repro.kernels import ops as _kops
+        lead = x.shape[:-1]
+        out2 = _kops.int8_matmul(xq.reshape(-1, k).astype(jnp.int8), w,
+                                 x_exp=x_exp,
+                                 residual_bits=residual_bits,
+                                 interpret=interpret)
+        return out2.reshape(*lead, out2.shape[-1])
+    # contract the LAST activation axis in place — no flatten/unflatten
+    # round-trip, so XLA keeps float-plan layouts downstream (a 2D
+    # reshape here costs two copy fusions per linear and forces a
+    # strided layout on the attention batch dots; measured ~3x on the
+    # scores matmul).  Bit-identical: each output element is the same
+    # ordered K-reduction either way.
+    dims = (((xq.ndim - 1,), (0,)), ((), ()))
+    macs = xq.size // k * k * int(w.shape[0 if transpose_w else 1])
+    if k * 2 ** (x_bits - 1) * 2 ** (w.bits - 1) <= _F32_EXACT:
+        # exact integer math in f32 containers (see _F32_EXACT)
+        wi = int_container(w)
+        if transpose_w:
+            wi = wi.T
+        if macs <= _SMALL_MACS:
+            # trivial contraction (the classifier head): unroll the K-loop
+            # into elementwise multiply-adds so XLA fuses the s8->f32
+            # container widening, the products, the int16 clip and the
+            # requant epilogue into the neighbouring fusions — zero
+            # standalone thunks, vs a weight-convert thunk plus a dot
+            # thunk (or a multiply fusion plus a reduce thunk for a
+            # sum-over-axis form).  Every product and partial sum is an
+            # exact integer under _F32_EXACT, so any summation order
+            # gives the same value — bit-identical to the dot.
+            acc = matmul_unrolled(xq, wi, k)
+        else:
+            acc = jax.lax.dot_general(xq, wi, dims,
+                                      preferred_element_type=jnp.float32)
+    else:
+        # contraction too long for the f32 mantissa: true int32 path
+        wl = w.int_values()
+        if transpose_w:
+            wl = wl.T
+        acc = jax.lax.dot_general(xq.astype(jnp.int32), wl, dims,
+                                  preferred_element_type=jnp.int32)
+    if residual_bits == 16:
+        acc = jnp.clip(acc, INT16_MIN, INT16_MAX)
+    axis = None if transpose_w else w.axis_exponents
+    return requant(acc, x_exp, w.exponent, axis)
+
+
+def int_exec_qkv(x: jnp.ndarray, ws, *, x_exp: int, x_bits: int = 8,
+                 residual_bits: int = 16):
+    """Fused Q/K/V integer projection: ONE int8 x int8 dot over the
+    three stored payloads concatenated on the output axis, with each
+    leaf's scalar-exponent delta folded into the per-column requant
+    epilogue.  Bitwise equal to three separate :func:`int_exec_einsum`
+    calls — an f32 dot's K-reduction is per-column independent, and the
+    po2 column scale 2^-(x+e0+delta) == 2^-(x+e_leaf)·2^-axis_leaf
+    exactly — at a third of the dot/convert thunk dispatches.
+
+    Returns the per-leaf outputs (split back at the leaf widths).
+    """
+    k = int(x.shape[-1])
+    xq = quantize_act(x, x_exp, bits=x_bits)
+    dims = (((xq.ndim - 1,), (0,)), ((), ()))
+    wide = max(w.bits for w in ws)
+    if k * 2 ** (x_bits - 1) * 2 ** (wide - 1) <= _F32_EXACT:
+        wi = jnp.concatenate([int_container(w) for w in ws], axis=-1)
+        acc = jax.lax.dot_general(xq, wi, dims,
+                                  preferred_element_type=jnp.float32)
+    else:
+        wl = jnp.concatenate([w.int_values() for w in ws], axis=-1)
+        acc = jax.lax.dot_general(xq.astype(jnp.int32), wl, dims,
+                                  preferred_element_type=jnp.int32)
+    if residual_bits == 16:
+        acc = jnp.clip(acc, INT16_MIN, INT16_MAX)
+    e0 = ws[0].exponent
+    if all(w.exponent == e0 and w.axis_exponents is None for w in ws):
+        axis = None
+    else:
+        cols = []
+        for w in ws:
+            delta = jnp.full((w.shape[-1],), w.exponent - e0, jnp.float32)
+            if w.axis_exponents is not None:
+                delta = delta + w.axis_exponents.astype(jnp.float32)
+            cols.append(delta)
+        axis = jnp.concatenate(cols)
+    out = requant(acc, x_exp, e0, axis)
+    splits = np.cumsum([w.shape[-1] for w in ws])[:-1].tolist()
+    return jnp.split(out, splits, axis=-1)
+
+
+def gather_descale(w: QTensor, idx: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup against the stored payload: gather integer ROWS,
+    then descale only what was looked up.  The full table never
+    materialises as float — the LM embed family's integer-executing
+    replacement for dequantise-first."""
+    rows = jnp.take(w.int_values(), idx, axis=0)
+    out = rows.astype(jnp.float32) * jnp.float32(2.0 ** (-w.exponent))
+    if w.axis_exponents is not None:
+        out = out * jnp.exp2(-w.axis_exponents.astype(jnp.float32))
+    return out
+
+
 def dequantize_tree(tree: Pytree) -> Pytree:
     """Replace every QTensor leaf with its float32 dequantisation."""
     return jax.tree.map(

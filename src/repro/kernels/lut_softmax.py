@@ -58,7 +58,7 @@ def _softmax_kernel_fixed(x_ref, exp_tab_ref, inv_tab_ref, o_ref, *, pre: int):
     num_q = jnp.take(exp_tab, idx)                               # ALU_EXP
     s_q = jnp.sum(num_q >> pre, axis=-1, keepdims=True)
     inv_q = _reciprocal_q24_body(s_q, inv_tab) >> pre            # ALU_INVERT
-    out_q = fxp.fixed_mul(num_q, inv_q)
+    out_q = fxp.fixed_mul(num_q, inv_q, nonneg=True)
     o_ref[...] = fxp.to_float(out_q).astype(o_ref.dtype)        # ALU_TO_FLOAT
 
 

@@ -69,7 +69,7 @@ def embed_frames(params, frames, cfg):
     batch, keeping the streaming path bit-identical to offline.
     """
     x = frames.astype(jnp.dtype(cfg.dtype))
-    return L.linear(x, params["proj_w"], "btf,fd->btd") + params["proj_b"]
+    return L.linear(x, params["proj_w"], "btf,fd->btd", cfg) + params["proj_b"]
 
 
 def encode_window(params, x, cfg):
@@ -93,7 +93,7 @@ def encode_window(params, x, cfg):
             f = L.apply_mlp(bp["mlp"], x, cfg)
             x = L.apply_norm(bp["ln2"], x + f, cfg)
             _health.tap_activation("block_out", x, cfg)
-    return (L.linear(x[:, 0], params["head_w"], "bd,dc->bc")
+    return (L.linear(x[:, 0], params["head_w"], "bd,dc->bc", cfg)
             + params["head_b"]).astype(jnp.float32)
 
 

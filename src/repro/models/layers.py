@@ -23,19 +23,47 @@ FSDP = "data"     # parameter shard axis (ZeRO-3 style)
 TP = "model"      # tensor-parallel axis
 
 
-def linear(x, w, eq: str):
+def linear(x, w, eq: str, cfg=None):
     """One linear layer, weight either float or a stored-integer QTensor.
 
-    Integer-resident engines (runtime backends ``lut``/``pallas``) hand
-    the model a tree whose matmul weights are int8 / nibble-packed int4
-    QTensors; ``quant.qt_einsum`` materialises the exact float view per
-    call (unpack + po2 de-scale behind a fusion barrier) — bit-identical
-    logits on every backend while the weight bytes inside the jitted
-    program stay packed.
+    Integer-EXECUTING plans (``cfg.int_exec``, pinned by
+    ``runtime.compile_model`` on the lut/pallas backends) quantise the
+    input with the eq-9 activation quantiser and multiply the stored
+    int8 / nibble-packed int4 payload directly, with a per-channel po2
+    requant epilogue (``quant.int_exec_einsum``) — no float weight view.
+    Unsupported layouts (per-channel exponents on the contraction axis,
+    i.e. the tied-embedding head) and non-executing resident plans keep
+    the PR-5 path: ``quant.qt_einsum`` materialises the exact float view
+    per call, bit-identical to dequantise-first.
     """
     if isinstance(w, quant.QTensor):
+        if cfg is not None and cfg.int_exec and \
+                quant.int_exec_supported(w, eq):
+            q = cfg.quant
+            return quant.int_exec_einsum(
+                eq, x, w,
+                x_exp=q.input_exponent if q is not None else 5,
+                residual_bits=q.residual_bits if q is not None else 16,
+                use_kernel=(cfg.act_approx == "pallas"
+                            and not cfg.kernel_interpret),
+                interpret=cfg.kernel_interpret)
         return quant.qt_einsum(eq, x, w)
     return jnp.einsum(eq, x, w)
+
+
+def embed_rows(embed, tokens, gather=None):
+    """Embedding lookup, table either float or a stored-integer QTensor.
+
+    QTensor tables gather integer rows and descale only what was looked
+    up (``quant.gather_descale``) — the LM embed family's integer-
+    residency path; the full table never materialises as float.
+    ``gather`` overrides the float-path lookup (e.g. the dist-sharded
+    ``ctx.embed_lookup``)."""
+    if isinstance(embed, quant.QTensor):
+        return quant.gather_descale(embed, tokens)
+    if gather is not None:
+        return gather(embed, tokens)
+    return jnp.take(embed, tokens, axis=0)
 
 
 def asfloat(w):
@@ -265,9 +293,23 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
     b, sq, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     _health.tap_activation("attn_in", x, cfg)
-    q = linear(x, p["wq"], "bsd,df->bsf")
-    k = linear(x, p["wk"], "bsd,df->bsf")
-    v = linear(x, p["wv"], "bsd,df->bsf")
+    wq, wk, wv = p["wq"], p["wk"], p["wv"]
+    if (cfg is not None and cfg.int_exec
+            and not (cfg.act_approx == "pallas" and not cfg.kernel_interpret)
+            and all(isinstance(w, quant.QTensor)
+                    and quant.int_exec_supported(w, "bsd,df->bsf")
+                    for w in (wq, wk, wv))):
+        # one fused int8 x int8 projection dot instead of three —
+        # bitwise equal to the separate calls (see quant.int_exec_qkv)
+        qm = cfg.quant
+        q, k, v = quant.int_exec_qkv(
+            x, (wq, wk, wv),
+            x_exp=qm.input_exponent if qm is not None else 5,
+            residual_bits=qm.residual_bits if qm is not None else 16)
+    else:
+        q = linear(x, wq, "bsd,df->bsf", cfg)
+        k = linear(x, wk, "bsd,df->bsf", cfg)
+        v = linear(x, wv, "bsd,df->bsf", cfg)
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, sq, h, dh)
@@ -323,7 +365,7 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
                    _q8_vec_decode(cv, cvs, x.dtype), cfg, q_offset=q_off,
                    kv_len_valid=valid, causal=causal)
         new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs}
-        out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd")
+        out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd", cfg)
         if "bo" in p:
             out = out + p["bo"]
         return out.astype(x.dtype), new_cache
@@ -349,7 +391,7 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_index=None,
         out = sdpa(q, ck_use, cv_use, cfg, q_offset=q_off,
                    kv_len_valid=valid, causal=causal)
         new_cache = {"k": ck, "v": cv}
-    out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd")
+    out = linear(out.reshape(b, sq, h * dh), p["wo"], "bsf,fd->bsd", cfg)
     if "bo" in p:
         out = out + p["bo"]
     return out.astype(x.dtype), new_cache
@@ -446,15 +488,15 @@ def apply_mlp(p, x, cfg):
     act = approx.activation(cfg.activation, cfg.act_approx,
                             interpret=cfg.kernel_interpret)
     if cfg.gated_mlp:
-        gate = act(linear(x, p["w_gate"], "bsd,df->bsf"))
-        up = linear(x, p["w_up"], "bsd,df->bsf")
+        gate = act(linear(x, p["w_gate"], "bsd,df->bsf", cfg))
+        up = linear(x, p["w_up"], "bsd,df->bsf", cfg)
         return linear((gate * up).astype(x.dtype), p["w_down"],
-                      "bsf,fd->bsd").astype(x.dtype)
-    h = linear(x, p["w1"], "bsd,df->bsf")
+                      "bsf,fd->bsd", cfg).astype(x.dtype)
+    h = linear(x, p["w1"], "bsd,df->bsf", cfg)
     if "b1" in p:
         h = h + p["b1"]
     h = act(h).astype(x.dtype)
-    out = linear(h, p["w2"], "bsf,fd->bsd")
+    out = linear(h, p["w2"], "bsf,fd->bsd", cfg)
     if "b2" in p:
         out = out + p["b2"]
     return out.astype(x.dtype)

@@ -183,8 +183,13 @@ def _scan_blocks(params, x, cfg, *, positions, states=None, cache_index=None,
 def _head(params, x, cfg):
     head = params.get("lm_head")
     if head is None:
-        head = params["embed"].T
-    logits = jnp.einsum("...d,dv->...v", x, head)
+        # tied embeddings: contract on the table's LAST axis (no explicit
+        # .T so stored-integer tables route through L.linear untransposed;
+        # per-channel exponents on the contraction axis fall back to the
+        # float-view path inside linear — the documented tied-head case)
+        logits = L.linear(x, params["embed"], "...d,vd->...v", cfg)
+    else:
+        logits = L.linear(x, head, "...d,dv->...v", cfg)
     if cfg.padded_vocab != cfg.vocab_size:   # mask pad ids
         pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
         logits = jnp.where(pad_mask, -1e30, logits)
@@ -194,7 +199,8 @@ def _head(params, x, cfg):
 def forward(params, tokens, cfg, *, positions=None):
     """tokens [B,S] -> logits [B,S,V] (teacher-forced / no cache)."""
     b, s = tokens.shape
-    x = ctx.embed_lookup(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = L.embed_rows(params["embed"], tokens,
+                     gather=ctx.embed_lookup).astype(jnp.dtype(cfg.dtype))
     x = ctx.shard_activations(x)
     positions = jnp.arange(s) if positions is None else positions
     x, _ = _scan_blocks(params, x, cfg, positions=positions)
@@ -259,7 +265,7 @@ def prefill(params, tokens, cfg, state):
                this entry handles prompt_len <= sliding_window directly.
     """
     b, s = tokens.shape
-    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = L.embed_rows(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
     idx = state["index"]
     per_lane = getattr(idx, "ndim", 0) == 1      # [B] vector (repro.cell)
     if cfg.family in ("dense", "moe"):
@@ -337,6 +343,6 @@ def merge_decode_state(old, new, lane_mask):
 
 def forward_no_blocks(params, tokens, cfg):
     """Embed -> final norm -> head only (dry-run cost decomposition)."""
-    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = L.embed_rows(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
     x = L.apply_norm(params["ln_f"], x, cfg)
     return _head(params, x, cfg)

@@ -53,6 +53,17 @@ _OP_BY_FUNC = {
              "activation"),
     "norm": ("apply_norm", "_rms"),
     "fft": ("_frame_features", "mfcc"),
+    # integer-execution epilogue/prologue work (quant.int_exec_einsum):
+    # activation quantise, container moves, per-channel requant, row
+    # gather-descale — everything around the integer GEMM itself (the
+    # dot_general still classifies as matmul by primitive fallback)
+    "requant": ("quantize_act", "requant", "int_container",
+                "gather_descale"),
+    # dispatch-trivial contractions that int_exec_einsum unrolls into an
+    # elementwise multiply-add chain (quant.matmul_unrolled): still the
+    # linear algebra, priced as MACs in _walk so matmul_flops stays
+    # backend-invariant (2*M*N*K, the dot_general convention)
+    "matmul": ("matmul_unrolled",),
 }
 
 # stage by frame function name, scanned innermost -> outermost
@@ -352,7 +363,14 @@ def _walk(jaxpr, mult: float, default_stage: str, rep: CostReport) -> None:
                 _walk(sub, sub_mult, default_stage, rep)
             continue
         stage, op = classify(eqn, default_stage)
-        rep.add(stage, op, eqn_flops(eqn), eqn_bytes(eqn), mult)
+        flops = eqn_flops(eqn)
+        if op == "matmul" and prim in _ELEMENTWISE:
+            # unrolled MAC chain (quant.matmul_unrolled): each product is
+            # a multiply-accumulate (2 flops), the explicit adds are the
+            # accumulates already priced in — total 2*M*N*K, matching
+            # the dot_general this chain replaces bit-for-bit
+            flops = 2.0 * flops if prim == "mul" else 0.0
+        rep.add(stage, op, flops, eqn_bytes(eqn), mult)
 
 
 def program_cost(fn, *args, stage: str = "forward") -> CostReport:
@@ -366,7 +384,10 @@ def program_cost(fn, *args, stage: str = "forward") -> CostReport:
 # -- Engine-level entry points ----------------------------------------------
 
 def _unpack_cost(engine) -> Optional[CostReport]:
-    if not engine.int_resident:
+    """Cost of the per-call unpack program — None for float plans AND
+    for integer-executing plans (no unpack stage exists; the eliminated
+    work is the int-exec flavour's headline saving)."""
+    if not engine.int_resident or engine.int_exec:
         return None
     from repro.core import quant
     return program_cost(quant.dequantize_tree, engine.params,
@@ -374,15 +395,19 @@ def _unpack_cost(engine) -> Optional[CostReport]:
 
 
 def _live_structs(engine):
-    """Avals of the float operand tree the model executables run on.
+    """The operand tree the model executables actually run on.
 
-    Integer-resident plans feed ``live_params()`` (the transient float
-    view) to the model jits — tracing with the packed QTensors instead
-    would route ``linear`` through the inline-dequant path and charge
-    unpack work to embed/encode twice.  ``eval_shape`` gives the view's
-    shapes without materialising it.
+    Integer-EXECUTING plans consume the packed QTensors directly —
+    tracing with them routes ``linear`` through ``quant.int_exec_einsum``
+    and charges the quantise/requant epilogue where it really runs.
+
+    Non-executing integer-resident plans feed ``live_params()`` (the
+    transient float view) to the model jits — tracing with the packed
+    QTensors instead would route ``linear`` through the inline-dequant
+    path and charge unpack work to embed/encode twice.  ``eval_shape``
+    gives the view's shapes without materialising it.
     """
-    if not engine.int_resident:
+    if not engine.int_resident or engine.int_exec:
         return engine.params
     from repro.core import quant
     return jax.eval_shape(quant.dequantize_tree, engine.params)

@@ -11,8 +11,8 @@ rolling cache, appends the run's smoke sweep, and gates on
 Entry schema (one line each, append-only, never rewritten)::
 
     {"arch": .., "backend": .., "batch": ..,        # the key
-     "latency": .., "latency_unit": "us_per_forward" | "ms_per_hop"
-                                    | "ms_per_token",
+     "latency": .., "latency_unit": "mean_us" | "ms_per_hop"
+                                    | "ms_per_token" | "ratio_mean_us",
      "rom_bytes": ..,                               # packed image bytes
      "extra": {...},                                # free-form row tail
      "provenance": {git_commit, jax_version, device, timestamp,

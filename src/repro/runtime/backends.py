@@ -34,10 +34,17 @@ class Backend:
     ``uses_kernels``: softmax/GELU execute as Pallas kernels; the config
     gets ``kernel_interpret`` pinned to the plan-time decision.
     ``int_resident``: the Engine keeps the quantised weights in their
-    stored integer form (int8 / nibble-packed int4 QTensors) and linear
-    layers apply the power-of-2 de-scale in the matmul epilogue
-    (``quant.qt_einsum``) — logits bit-identical to dequantise-first,
-    weight bytes in the jitted program packed.
+    stored integer form (int8 / nibble-packed int4 QTensors) rather than
+    a plan-time dequantised float copy.
+    ``int_exec``: the plan integer-EXECUTES: linear layers quantise
+    their inputs (eq 9, the recipe's input exponent) and multiply the
+    stored payload directly with a per-channel po2 requant epilogue
+    (``quant.int_exec_einsum``) — no per-call ``dequantize_tree`` unpack
+    stage, no float weight view in the plan.  ``runtime.compile_model``
+    resolves the actual plan flavour (residency x family) and pins
+    ``cfg.int_exec``; non-executing resident plans keep the PR-5
+    dequantise-per-call path (``quant.qt_einsum``), bit-identical to
+    dequantise-first.
     """
 
     name: str
@@ -48,6 +55,7 @@ class Backend:
     uses_lut: bool = False
     uses_kernels: bool = False
     int_resident: bool = False
+    int_exec: bool = False
     attention: str = "xla"         # xla | flash_lut (kernels.lut_attention)
 
     def configure(self, cfg, *, interpret: bool | None = None,
@@ -102,14 +110,14 @@ register_backend(Backend(
 
 register_backend(Backend(
     "lut", "jnp Q8.24 LUT reference: fixed-point softmax + LUT GELU, "
-           "integer-resident PTQ params (the '+Hardware' path, Table IX "
-           "column 4)",
+           "integer-resident AND integer-executing PTQ params (the "
+           "'+Hardware' path, Table IX column 4)",
     softmax_mode="lut_fixed", act_approx="lut", quantize=True, uses_lut=True,
-    int_resident=True))
+    int_resident=True, int_exec=True))
 
 register_backend(Backend(
     "pallas", "Pallas kernels for softmax/GELU (interpret on CPU, compiled "
-              "Mosaic on TPU — decided at plan time), integer-resident PTQ "
-              "params",
+              "Mosaic on TPU — decided at plan time), integer-resident and "
+              "integer-executing PTQ params",
     softmax_mode="pallas", act_approx="pallas", quantize=True, uses_lut=True,
-    uses_kernels=True, int_resident=True))
+    uses_kernels=True, int_resident=True, int_exec=True))

@@ -76,6 +76,9 @@ class Engine:
     recipe: Optional[QuantRecipe]
     quantized_bytes: Optional[tuple] = None   # (int bytes, float bytes)
     taps: bool = False              # forward also returns quant-health aux
+    int_exec: bool = False          # integer-executing plan: the model
+    #                                 consumes the packed tree directly
+    #                                 (no per-call unpack stage/span)
 
     def __post_init__(self):
         self._mod = _model_module(self.exec_cfg)
@@ -85,7 +88,22 @@ class Engine:
         self._stream_steps = {}
         self._taps_fn = None
         self._unpack = jax.jit(quant.dequantize_tree) \
-            if self.int_resident else None
+            if self.int_resident and not self.int_exec else None
+        # Fast dispatch for plans whose operand tree never changes between
+        # calls (no per-call unpack): pre-flatten the params ONCE and jit a
+        # wrapper over the flat leaves.  Per-call argument processing then
+        # walks a flat tuple of plain arrays instead of re-flattening
+        # registered-dataclass QTensor nodes in Python — measured ~15 us
+        # per forward on the integer-executing kwt-tiny plan, with the
+        # unflatten happening only at trace time (identical jaxpr/HLO, so
+        # logits are bit-identical to the tree-operand executable).
+        self._forward_flat = self._flat_leaves = None
+        if self._unpack is None:
+            leaves, treedef = jax.tree_util.tree_flatten(self.params)
+            self._flat_leaves = tuple(leaves)
+            self._forward_flat = jax.jit(
+                lambda lv, x: self._mod.forward(
+                    jax.tree_util.tree_unflatten(treedef, lv), x, cfg))
         if cfg.family == "kwt":
             self._embed = jax.jit(
                 lambda p, fr: self._mod.embed_frames(p, fr, cfg))
@@ -95,17 +113,22 @@ class Engine:
     def live_params(self):
         """The float operand tree the model executables run on.
 
-        Integer-resident plans store packed int8 / nibble-packed int4
-        QTensors in ``params``; the float view is materialised per call
-        by a separate jitted unpack program — the software analogue of
-        the device's shift-dequantiser stage (ROM bytes stay packed, the
-        float image is a transient).  Keeping the unpack in its OWN
-        executable is load-bearing for the bit-identity contract: when
-        quantiser ops share the model's XLA module, CPU fusion re-tiles
-        unrelated reductions (LayerNorm/softmax) and rounding becomes
-        weight-producer-dependent; as a separate stage the model
-        executable is byte-identical to the dequantise-first plan and
-        receives bit-identical operand values (po2 de-scales are exact).
+        Integer-EXECUTING plans (``int_exec``) have no float view at all:
+        the model executables consume the packed QTensors directly
+        (``quant.int_exec_einsum``), so this returns ``params`` as-is.
+
+        Non-executing integer-resident plans store packed int8 /
+        nibble-packed int4 QTensors in ``params``; the float view is
+        materialised per call by a separate jitted unpack program — the
+        software analogue of the device's shift-dequantiser stage (ROM
+        bytes stay packed, the float image is a transient).  Keeping the
+        unpack in its OWN executable is load-bearing for the bit-identity
+        contract: when quantiser ops share the model's XLA module, CPU
+        fusion re-tiles unrelated reductions (LayerNorm/softmax) and
+        rounding becomes weight-producer-dependent; as a separate stage
+        the model executable is byte-identical to the dequantise-first
+        plan and receives bit-identical operand values (po2 de-scales
+        are exact).
         """
         return self.params if self._unpack is None else \
             self._unpack(self.params)
@@ -122,8 +145,21 @@ class Engine:
         """
         tr = _trace.active_tracer()
         if tr is None and not self.taps:
+            if self._forward_flat is not None:
+                return self._forward_flat(self._flat_leaves, x)
             return self._forward(self.live_params(), x)
         return self._forward_instrumented(tr, x)
+
+    def _live_traced(self, tr):
+        """Operand tree under tracing.  Plans with no unpack program —
+        float params, or integer-EXECUTING packed params — emit no
+        ``unpack`` span: there is no unpack stage to attribute (timing
+        the identity ``live_params`` walk would charge tree-flatten
+        noise to a stage the plan does not have)."""
+        if self._unpack is None:
+            return self.params
+        with tr.span("unpack"):
+            return jax.block_until_ready(self.live_params())
 
     def _forward_instrumented(self, tr, x):
         if tr is None:                         # taps only, no tracing
@@ -132,10 +168,16 @@ class Engine:
         # Spans measure device work: fence each stage with
         # block_until_ready (async dispatch is preserved when untraced).
         with tr.span("forward", {"backend": self.backend.name}):
-            with tr.span("unpack"):
-                lp = jax.block_until_ready(self.live_params())
+            lp = self._live_traced(tr)
             with tr.span("encode"):
-                logits = jax.block_until_ready(self._forward(lp, x))
+                # same executable selection as the untraced path: the flat
+                # pre-flattened program when the operand tree is static
+                # (lp IS self.params then), so the span times the serving
+                # executable rather than compiling the tree-operand twin
+                logits = jax.block_until_ready(
+                    self._forward_flat(self._flat_leaves, x)
+                    if self._forward_flat is not None
+                    else self._forward(lp, x))
             if self.taps:
                 with tr.span("taps"):
                     aux = jax.block_until_ready(self._run_taps(lp, x))
@@ -191,8 +233,7 @@ class Engine:
         if tr is None:
             return step(self.live_params(), state, chunk)
         with tr.span("stream_step", {"backend": self.backend.name}):
-            with tr.span("unpack"):
-                lp = jax.block_until_ready(self.live_params())
+            lp = self._live_traced(tr)
             with tr.span("hop"):
                 return jax.block_until_ready(step(lp, state, chunk))
 
@@ -210,8 +251,7 @@ class Engine:
         if tr is None:
             return self._prefill(self.live_params(), tokens, state)
         with tr.span("prefill", {"backend": self.backend.name}):
-            with tr.span("unpack"):
-                lp = jax.block_until_ready(self.live_params())
+            lp = self._live_traced(tr)
             with tr.span("encode"):
                 return jax.block_until_ready(self._prefill(lp, tokens, state))
 
@@ -224,8 +264,7 @@ class Engine:
         if tr is None:
             return self._decode(self.live_params(), token, state)
         with tr.span("decode_step", {"backend": self.backend.name}):
-            with tr.span("unpack"):
-                lp = jax.block_until_ready(self.live_params())
+            lp = self._live_traced(tr)
             with tr.span("encode"):
                 return jax.block_until_ready(self._decode(lp, token, state))
 
@@ -288,7 +327,8 @@ class Engine:
             f", w=2^{self.recipe.weight_exponent}" \
             f"/x=2^{self.recipe.input_exponent} " \
             f"int{self.recipe.bits} {self.recipe.rounding}" + \
-            (" resident" if self.int_resident else "")
+            (" int-exec" if self.int_exec else
+             " resident" if self.int_resident else "")
         interp = "" if self.interpret is None else \
             f", pallas={'interpret' if self.interpret else 'mosaic'}"
         attn = "" if self.exec_cfg.attn_impl == "xla" else \
@@ -405,11 +445,37 @@ def _recipe_from_tree(cfg, tree) -> QuantRecipe:
         per_channel=any(q.axis_exponents is not None for q in qleaves))
 
 
+def _lm_partial_resident(qtree: dict) -> dict:
+    """LM partial residency: keep the big vocab-facing leaves (embedding
+    table / untied head) packed for integer execution, dequantise the
+    per-block stack.  ``lax.scan`` carries the blocks as stacked leaves
+    and per-channel QTensor metadata (``axis_exponents`` over the last
+    axis) has no leading layer axis to scan over, so block weights take
+    the dequantise-first path; the embedding is consumed row-wise via
+    ``quant.gather_descale`` (descale only the looked-up rows)."""
+    packed = {k: v for k, v in qtree.items() if k in ("embed", "lm_head")}
+    rest = {k: v for k, v in qtree.items() if k not in packed}
+    return {**quant.dequantize_tree(rest), **packed}
+
+
+def _pin_int_exec(exec_cfg, recipe: QuantRecipe):
+    """Pin the integer-execution plan flavour onto the exec config: the
+    activation quantiser shares the recipe's eq-9 semantics (input
+    exponent, residual width), so layers and the artifact agree on the
+    fixed-point grid by construction."""
+    from repro.configs.base import QuantConfig
+    qc = exec_cfg.quant if exec_cfg.quant is not None else QuantConfig()
+    qc = dataclasses.replace(qc, input_exponent=recipe.input_exponent,
+                             residual_bits=recipe.residual_bits)
+    return exec_cfg.with_(int_exec=True, quant=qc)
+
+
 def compile_model(cfg, params, backend="float",
                   recipe: QuantRecipe | None = None,
                   interpret: bool | None = None,
                   attention: str | None = None,
                   integer_resident: bool | None = None,
+                  integer_exec: bool | None = None,
                   taps: bool = False) -> Engine:
     """Plan execution of ``params`` under ``backend``.
 
@@ -424,10 +490,23 @@ def compile_model(cfg, params, backend="float",
     ``integer_resident`` overrides the backend's weight-residency policy
     (default: ``lut``/``pallas`` keep the stored int8 / nibble-packed
     int4 QTensors live inside the jitted program and de-scale in the
-    matmul epilogue — bit-identical logits, packed weight bytes; other
-    backends deploy the dequantised float copy).  Integer residency
-    currently covers the ``kwt`` family (the paper model whose layers
-    consume QTensors); LM-scale families fall back to dequantise-first.
+    matmul epilogue — packed weight bytes; other backends deploy the
+    dequantised float copy).  Integer residency currently covers the
+    ``kwt`` family (the paper model whose layers consume QTensors);
+    LM-scale families get PARTIAL residency under integer execution
+    (embedding/head stay packed, scanned blocks dequantise — see
+    ``_lm_partial_resident``) and otherwise fall back to
+    dequantise-first.
+
+    ``integer_exec`` overrides the backend's execution policy (default:
+    ``lut``/``pallas`` integer-EXECUTE resident plans — linear layers
+    quantise activations to the recipe's eq-9 grid and multiply the
+    stored int payload directly, per-channel po2 requant in the
+    epilogue, no per-call unpack stage).  ``integer_exec=False`` keeps
+    the PR-5 dequantise-per-call resident plan, whose logits are
+    bit-identical to dequantise-first; integer execution instead matches
+    the Q8.24 fixed-point reference (activation rounding + INT16
+    residual clip are part of the plan's math, as on the device).
 
     ``interpret`` overrides the plan-time Pallas interpret/Mosaic
     auto-decision (tests only).  ``attention`` overrides the backend's
@@ -450,12 +529,28 @@ def compile_model(cfg, params, backend="float",
     elif recipe is None and be.quantize:
         recipe = QuantRecipe.from_config(cfg)
     qbytes = None
+    int_exec = False
+    exec_flag = be.int_exec if integer_exec is None else bool(integer_exec)
     if recipe is not None or pre_quantized:
         qtree = params if pre_quantized else recipe.quantize(params)
+        # ROM footprint is the artifact's full packed image, independent
+        # of which leaves the plan keeps resident.
         qbytes = quant.tree_quantized_bytes(qtree)
-        resident = (be.int_resident and cfg.family == "kwt"
-                    if integer_resident is None else bool(integer_resident))
-        params = qtree if resident else quant.dequantize_tree(qtree)
+        if integer_resident is not None or cfg.family == "kwt":
+            resident = (be.int_resident and cfg.family == "kwt"
+                        if integer_resident is None
+                        else bool(integer_resident))
+            params = qtree if resident else quant.dequantize_tree(qtree)
+            int_exec = exec_flag and resident
+        elif exec_flag and be.int_resident and isinstance(qtree, dict) \
+                and "embed" in qtree:
+            params = _lm_partial_resident(qtree)
+            int_exec = True
+        else:
+            params = quant.dequantize_tree(qtree)
     exec_cfg = be.configure(cfg, interpret=interpret, attention=attention)
+    if int_exec:
+        exec_cfg = _pin_int_exec(exec_cfg, recipe)
     return Engine(cfg=cfg, exec_cfg=exec_cfg, params=params, backend=be,
-                  recipe=recipe, quantized_bytes=qbytes, taps=taps)
+                  recipe=recipe, quantized_bytes=qbytes, taps=taps,
+                  int_exec=int_exec)

@@ -42,17 +42,18 @@ def test_float_plan_clean(params):
     assert rep.result("geometry").metrics["kernels"] == 0
 
 
-def test_lut_plan_clean_with_whitelisted_unpack(lut_engine):
-    rep = analysis.check_engine(lut_engine)
+def test_lut_plan_clean_with_no_unpack_stage(lut_engine):
+    """The default lut plan integer-executes: no per-call unpack stage,
+    float_leak_count == 0 — the ROADMAP full-integer criterion — and the
+    plan survives the strict full-integer gate."""
+    rep = analysis.check_engine(lut_engine, strict=True)
     assert rep.ok, rep.render()
     res = rep.result("residency")
-    # the known unpack stage: one float cast per rank-2 QTensor leaf,
-    # whitelisted with a report line, counted for the ROADMAP item
-    assert res.metrics["float_leak_count"] == 9
-    assert any(f.kind == "unpack-stage" and f.severity == "whitelisted"
+    assert lut_engine.int_exec
+    assert res.metrics["float_leak_count"] == 0
+    assert any(f.kind == "unpack-stage" and f.severity == "info"
                for f in res.findings)
-    # in-module resident program: every cast sanctioned, none violating
-    assert res.metrics["descale_sites"] > 0
+    # in-module program: every cast sanctioned, none violating
     assert res.count("violation") == 0
     # budget: the deployment plan fits the paper's 64 kB with the table
     bud = rep.result("budget").metrics
@@ -61,6 +62,25 @@ def test_lut_plan_clean_with_whitelisted_unpack(lut_engine):
     assert bud["rom_bytes"] == lut_engine.rom_bytes
     # verdict lands in describe()
     assert "analysis: ok" in lut_engine.describe()
+
+
+def test_non_exec_resident_plan_counts_unpack_leaks(params):
+    """integer_exec=False restores the PR-5 dequantise-per-call plan:
+    the separate unpack stage is back (one float cast per rank-2
+    QTensor leaf, whitelisted) and the strict gate refuses it."""
+    eng = runtime.compile_model(CFG, params, backend="lut",
+                                integer_exec=False)
+    rep = analysis.check_engine(eng, passes=("residency",))
+    assert rep.ok, rep.render()
+    res = rep.result("residency")
+    assert res.metrics["float_leak_count"] == 9
+    assert any(f.kind == "unpack-stage" and f.severity == "whitelisted"
+               for f in res.findings)
+    assert res.metrics["descale_sites"] > 0
+    strict = analysis.check_engine(eng, passes=("residency",), strict=True)
+    assert not strict.ok
+    assert any(f.kind == "strict-mode"
+               for f in strict.result("residency").findings)
 
 
 def test_pallas_plan_clean_and_geometry(params):

@@ -315,10 +315,16 @@ def test_hot_swap_parity_gate_and_generation(kwt_setup):
     after = np.asarray(handle.engine.forward(probe))
     assert not np.array_equal(before, after)
     # the deploy gate's own criterion, re-checked from outside: the
-    # installed int-resident plan == dequantise-first plan of the artifact
+    # installed integer-executing plan reproduces a fresh same-flavour
+    # compile of the artifact bit-for-bit, and stays within the
+    # activation-quant envelope of the dequantise-first reference
+    assert handle.engine.int_exec
+    same = runtime.compile_model(cfg, q2, backend="lut")
+    np.testing.assert_array_equal(after, np.asarray(same.forward(probe)))
     ref = runtime.compile_model(cfg, q2, backend="lut",
-                                integer_resident=False)
-    np.testing.assert_array_equal(after, np.asarray(ref.forward(probe)))
+                                integer_resident=False, integer_exec=False)
+    np.testing.assert_allclose(after, np.asarray(ref.forward(probe)),
+                               atol=cellmod.hotswap._INT_EXEC_PROBE_TOL)
     assert handle.live_params() is not lp0       # cache invalidated
 
 

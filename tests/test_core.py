@@ -329,6 +329,98 @@ def test_qt_einsum_value_exact_vs_dequantize():
         assert bool(jnp.array_equal(got, want)), bits
 
 
+@given(st.integers(3, 6), st.integers(0, 10**6))
+def test_quantize_act_matches_weight_quantiser_grid(y, seed):
+    """The activation quantiser shares eq 9's nearest semantics with the
+    PTQ weight cast: same grid, same rounding, same saturation — just in
+    an f32 container instead of int8 storage."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 8)) * 2.0
+    got = quant.quantize_act(x, y)
+    want = quant.quantize_po2(x, y, rounding="nearest").int_values()
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want, np.float32))
+    # container exactness: every value is an integer on the int8 lattice
+    assert bool(jnp.array_equal(got, jnp.round(got)))
+
+
+def test_quantize_act_saturation_edges():
+    """Values beyond the eq-9 grid edge clamp at the bits-wide extremes;
+    the half-LSB offset rounds ties toward +inf (floor(x+0.5))."""
+    x = jnp.asarray([1e6, -1e6, 3.96875, -4.0, 0.015625, -0.015625, 0.0])
+    q = quant.quantize_act(x, 5)                 # grid step 2^-5
+    assert [int(v) for v in q] == [127, -128, 127, -128, 1, 0, 0]
+    lo4, hi4 = quant.int_range(4)
+    q4 = quant.quantize_act(x, 5, bits=4)
+    assert int(q4.max()) == hi4 and int(q4.min()) == lo4
+
+
+@given(st.integers(0, 10**6), st.booleans())
+def test_int_exec_einsum_matches_int32_reference(seed, per_channel):
+    """Property: the integer-executing einsum (f32-container fast path)
+    is bit-equal to an explicit int32 reference — quantise, integer
+    matmul, INT16 clip, per-channel po2 requant — for scalar AND
+    per-channel recipes."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (5, 10))
+    w = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (10, 6))
+    axis = None
+    if per_channel:
+        axis = jnp.asarray([-1, 0, 1, 0, -2, 2], jnp.int8)
+    grid = quant.quantize_po2(w, 6, rounding="nearest").int_values()
+    qt = quant.QTensor.store(grid, 6, axis_exponents=axis)
+    got = quant.int_exec_einsum("bd,df->bf", x, qt, x_exp=5)
+    xi = quant.quantize_act(x, 5).astype(jnp.int32)
+    acc = jnp.clip(xi @ qt.int_values().astype(jnp.int32),
+                   quant.INT16_MIN, quant.INT16_MAX)
+    want = acc.astype(jnp.float32) * jnp.float32(2.0 ** -(5 + 6))
+    if axis is not None:
+        want = want * jnp.exp2(-axis.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_exec_supported_matrix_and_tied_head():
+    """Support matrix: weight-first always; weight-last (tied head) only
+    without per-channel exponents (they'd sit on the contraction axis);
+    non-QTensor / non-rank-2 never.  The supported tied-head path
+    matches the int32 reference."""
+    w = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (7, 10))
+    qs = quant.quantize_po2(w, 6, rounding="nearest")
+    qc = quant.QTensor.store(qs.int_values(), 6,
+                             axis_exponents=jnp.zeros((10,), jnp.int8))
+    assert quant.int_exec_supported(qs, "bsd,df->bsf")
+    assert quant.int_exec_supported(qc, "bsd,df->bsf")
+    assert quant.int_exec_supported(qs, "...d,vd->...v")
+    assert not quant.int_exec_supported(qc, "...d,vd->...v")
+    assert not quant.int_exec_supported(w, "bsd,df->bsf")
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 10))
+    got = quant.int_exec_einsum("bd,vd->bv", x, qs, x_exp=5)
+    xi = quant.quantize_act(x, 5).astype(jnp.int32)
+    acc = jnp.clip(xi @ qs.int_values().astype(jnp.int32).T,
+                   quant.INT16_MIN, quant.INT16_MAX)
+    want = acc.astype(jnp.float32) * jnp.float32(2.0 ** -(5 + 6))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_descale_matches_dequantized_rows():
+    """Row gather + descale == gathering rows of the full dequantised
+    table (exact po2 scaling commutes with the gather), int8 and packed
+    int4, scalar and per-channel."""
+    key = jax.random.PRNGKey(4)
+    w = 0.4 * jax.random.normal(key, (12, 6))
+    idx = jnp.asarray([[0, 3, 11], [5, 5, 1]])
+    for bits in (8, 4):
+        for axis in (None, jnp.asarray([1, 0, -1, 2, 0, -2], jnp.int8)):
+            e = quant.choose_exponent(w, bits=bits)
+            grid = quant.quantize_po2(w, e, bits=bits,
+                                      rounding="nearest").int_values()
+            qt = quant.QTensor.store(grid, e, bits=bits,
+                                     axis_exponents=axis)
+            got = quant.gather_descale(qt, idx)
+            want = jnp.take(qt.dequantize(), idx, axis=0)
+            assert bool(jnp.array_equal(got, want)), (bits, axis is None)
+
+
 def test_qmatmul_matches_float():
     key = jax.random.PRNGKey(2)
     x = jax.random.normal(key, (8, 32)) * 0.5

@@ -85,6 +85,29 @@ def test_int8_matmul_accepts_stored_qtensors():
         atol=1e-6)
 
 
+def test_int8_matmul_kernel_bit_matches_jnp_int_exec_path():
+    """The Engine's two int-exec flavours are the same math: the Pallas
+    kernel (interpret mode) and the jnp emulation quant.int_exec_einsum
+    uses on CPU agree BIT-FOR-BIT — int8 x int8, INT16 residual clip,
+    po2 requant epilogue, scalar and per-channel."""
+    from repro.core import quant
+
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 9))
+    x = jax.random.normal(k1, (8, 32))
+    w = 0.3 * jax.random.normal(k2, (32, 16))
+    grid = quant.quantize_po2(w, 6, rounding="nearest").int_values()
+    for axis in (None, jax.random.randint(jax.random.fold_in(KEY, 10),
+                                          (16,), -2, 3).astype(jnp.int8)):
+        qw = quant.QTensor.store(grid, 6, axis_exponents=axis)
+        jnp_out = quant.int_exec_einsum("bd,df->bf", x, qw, x_exp=5,
+                                        residual_bits=16)
+        xi = quant.quantize_act(x, 5).astype(jnp.int8)
+        kern = ops.int8_matmul(quant.QTensor(xi, 5), qw,
+                               residual_bits=16, interpret=True)
+        assert jnp.array_equal(jnp_out, kern), \
+            f"kernel vs jnp int-exec diverged (axis={axis is not None})"
+
+
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,d", [
     (1, 2, 2, 64, 64, 32),       # MHA square
     (2, 4, 2, 64, 64, 32),       # GQA

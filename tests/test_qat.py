@@ -263,18 +263,28 @@ def trained(params):
 
 
 def test_qat_eval_bit_identical_to_exported_lut_engine(trained):
+    # QAT eval fake-quantises weights but keeps float activations, so it
+    # matches the NON-executing lut plan bitwise; the default int-exec
+    # plan additionally quantises activations (eq 9) and is gated by
+    # tolerance instead.
     spec, p, qs = trained
     ex = qat.export(p, spec, qs)
     x = 0.5 * jax.random.normal(jax.random.PRNGKey(7), (8, *CFG.input_dim))
     ev = qat.eval_forward(CFG, spec, ex.recipe)(p, x)
     eng = runtime.compile_model(CFG, ex.params, backend="lut",
-                                recipe=ex.recipe)
+                                recipe=ex.recipe, integer_exec=False)
     assert bool(jnp.array_equal(ev, eng.forward(x))), \
         "QAT eval path != exported lut engine"
     # the recipe equals the config default here, so the default-recipe
     # deployment path is identical too
-    eng2 = runtime.compile_model(CFG, ex.params, backend="lut")
+    eng2 = runtime.compile_model(CFG, ex.params, backend="lut",
+                                 integer_exec=False)
     assert bool(jnp.array_equal(ev, eng2.forward(x)))
+    # the int-executing deployment of the same artifact stays within the
+    # activation-quant envelope of the QAT eval logits
+    eng3 = runtime.compile_model(CFG, ex.params, backend="lut")
+    assert eng3.int_exec
+    assert float(jnp.max(jnp.abs(ev - eng3.forward(x)))) < 0.35
 
 
 def test_export_learned_exponent_round_trips(params):
